@@ -1,0 +1,59 @@
+"""Federated learning as decentralized optimization over a time-varying
+network (paper §1: FedAvg = alternating local updates and global averaging).
+
+The federated schedule is `local_steps` rounds of the self-loop-only graph
+followed by one complete-graph round; running DSGD over it IS local-SGD /
+FedAvg.  Compares against the always-connected and sun-shaped schedules at
+equal communication budget (communication happens only on non-identity
+rounds, so the federated run 'pays' 1/(local_steps+1) of the comm cost).
+
+    PYTHONPATH=src python examples/federated.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core import gossip, topology as topo
+from repro.data import logreg_dataset, logreg_loss_and_grad
+
+
+def main():
+    n, d, m = 16, 64, 256
+    T = 480
+    H, y = logreg_dataset(n, m, d, seed=0)
+    _, _, stoch, _, gnorm2 = logreg_loss_and_grad(rho=0.1)
+    x0 = jnp.zeros((n, d))
+
+    def grad_fn(xs, key):
+        return stoch(xs, H, y, key, 16)
+
+    def eval_fn(xb):
+        return gnorm2(xb, H, y)
+
+    schedules = {
+        "fedavg(local=4)": gossip.schedule_from_topology(
+            topo.federated_schedule(n, local_steps=4)),
+        "fedavg(local=16)": gossip.schedule_from_topology(
+            topo.federated_schedule(n, local_steps=16)),
+        "complete": gossip.WeightSchedule((np.ones((n, n)) / n,)),
+        "sun(beta=1-1/n)": gossip.theorem3_weight_schedule(n, 1 - 1 / n),
+    }
+    print(f"n={n}  budget T={T}  DSGD with gamma=0.4 over each schedule")
+    print(f"{'schedule':18s} {'final ||grad f(x_bar)||^2':>26s} {'comm rounds':>12s}")
+    for name, sched in schedules.items():
+        _, hist = alg.run(alg.dsgd(0.4), x0, grad_fn, sched, T,
+                          jax.random.key(0), eval_fn=eval_fn, eval_every=T - 1)
+        # count non-identity gossip rounds in one period
+        per = getattr(sched, "period", 1)
+        comm = sum(1 for t in range(per)
+                   if not np.allclose(sched(t), np.eye(n))) * (T // per)
+        print(f"{name:18s} {float(hist[-1][1]):26.6f} {comm:12d}")
+    print("\nFedAvg trades convergence for (local_steps+1)x less "
+          "communication — the time-varying-network view makes that a "
+          "topology choice, not a different algorithm.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Reproduce paper Figure 2: DSGD / DSGT / MC-DSGT on non-convex-regularized
+logistic regression over random time-varying sun-shaped graphs.
+
+Left plot protocol:  (n, |C|) = (16, 1), R = 2, MNIST-like  (d = 784)
+Right plot protocol: (n, |C|) = (32, 4), R = 4, COVTYPE-like (d = 54)
+
+Heterogeneous partition: half the nodes hold 80% positive labels, the other
+half 80% negative (§6).  Datasets are synthetic stand-ins with the same
+shapes (no network access in this container); the *algorithmic* comparison
+— the figure's actual claim — is preserved.  Writes CSV curves to
+experiments/figure2_<name>.csv.
+
+    PYTHONPATH=src python examples/paper_figure2.py [--steps 400]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.logreg_paper import COVTYPE, MNIST
+from repro.core import algorithms as alg
+from repro.core import gossip, topology as topo
+from repro.data import logreg_dataset, logreg_loss_and_grad
+
+
+def random_sun_schedule(n: int, c_size: int, period: int = 16, seed: int = 0):
+    """Random time-varying sun-shaped graphs with |C| = c_size (the §6
+    protocol: centers re-drawn randomly each round)."""
+    rng = np.random.default_rng(seed)
+    mats = []
+    for _ in range(period):
+        center = rng.choice(n, size=c_size, replace=False)
+        adj = topo.sun_shaped_graph(n, center)
+        mats.append(gossip.laplacian_rule(adj))
+    return gossip.WeightSchedule(tuple(mats))
+
+
+def run_setup(lc, T_budget: int, gamma: float, seed: int = 0):
+    n = lc.n_nodes
+    H, y = logreg_dataset(n, lc.m, lc.d, seed=seed)
+    _, _, stoch_grad, global_loss, gnorm2 = logreg_loss_and_grad(lc.rho)
+    sched = random_sun_schedule(n, lc.center_size, seed=seed)
+    x0 = jnp.zeros((n, lc.d))
+
+    def grad_fn(xs, key):
+        return stoch_grad(xs, H, y, key, lc.batch)
+
+    def eval_fn(xbar):
+        return gnorm2(xbar, H, y)
+
+    # per-algorithm step-size tuning over a small grid (the paper reports
+    # tuned curves): MC-DSGT's R-fold gradient accumulation cuts oracle
+    # noise by R, admitting up to ~R x larger steps at equal stability.
+    def tuned(make_algo, steps, gammas):
+        best = None
+        for g in gammas:
+            _, hist = alg.run(make_algo(g), x0, grad_fn, sched, steps,
+                              jax.random.key(seed), eval_fn=eval_fn,
+                              eval_every=max(1, steps // 40))
+            pts = [(t, float(v)) for t, v in hist]
+            if best is None or pts[-1][1] < best[-1][1]:
+                best = pts
+        return best
+
+    curves = {}
+    grid = [gamma, 2 * gamma]
+    mc_grid = sorted({gamma, gamma * lc.R / 2, gamma * lc.R})
+    curves["dsgd"] = tuned(lambda g: alg.dsgd(g), T_budget, grid)
+    curves["dsgt"] = tuned(lambda g: alg.dsgt(g), T_budget // 2, grid)
+    curves[f"mc_dsgt(R={lc.R})"] = tuned(
+        lambda g: alg.mc_dsgt(g, R=lc.R), T_budget // (2 * lc.R), mc_grid)
+    for name, pts in curves.items():
+        print(f"  {lc.name} {name:14s} final ||grad||^2 = {pts[-1][1]:.6f}")
+    return curves
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400,
+                    help="total per-node round budget T")
+    ap.add_argument("--out", default="experiments")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    all_results = {}
+    for lc, gamma in [(MNIST, 0.5), (COVTYPE, 0.5)]:
+        print(f"setup {lc.name}: n={lc.n_nodes} |C|={lc.center_size} "
+              f"R={lc.R} rho={lc.rho}")
+        curves = run_setup(lc, args.steps, gamma)
+        all_results[lc.name] = curves
+        path = os.path.join(args.out, f"figure2_{lc.name}.csv")
+        with open(path, "w") as f:
+            f.write("algo,T,grad_norm_sq\n")
+            for name, pts in curves.items():
+                for t, g in pts:
+                    f.write(f"{name},{t},{g}\n")
+        print(f"  wrote {path}")
+
+    # the figure's claim: MC-DSGT converges lower at equal budget (or to
+    # parity when the random schedule mixes fast and both sit at the
+    # gradient-noise floor, as for the |C|=4 covtype protocol)
+    for name, curves in all_results.items():
+        final = {k: v[-1][1] for k, v in curves.items()}
+        mc = min(v for k, v in final.items() if k.startswith("mc"))
+        if mc <= final["dsgd"]:
+            verdict = "beats"
+        elif mc < 1e-4 and final["dsgd"] < 1e-4:
+            verdict = "matches (both at the noise floor)"
+        else:
+            verdict = "LOSES to"
+        print(f"{name}: MC-DSGT {verdict} DSGD "
+              f"({mc:.6f} vs {final['dsgd']:.6f})")
+    return all_results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: decentralized non-convex optimization over a time-varying
+sun-shaped network — DSGD vs DSGT vs MC-DSGT (paper Table 1 in miniature).
+
+Runs the paper's §6 objective (logistic regression + non-convex regularizer)
+on synthetic heterogeneous data and prints the global gradient norm
+||∇f(x̄)||² per oracle/communication budget T for all three algorithms.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import algorithms as alg
+from repro.core import gossip
+from repro.data import logreg_dataset, logreg_loss_and_grad
+
+
+def main():
+    n, d, m = 16, 64, 256
+    beta = 1 - 1 / n          # worst connectivity Theorem 3 allows
+    R = 4                     # MC-DSGT consensus/accumulation rounds
+    T_budget = 960            # total gossip+oracle rounds per node
+    gamma = 0.4
+    batch = 16
+
+    H, y = logreg_dataset(n, m, d, seed=0)
+    loss_i, full_grad, stoch_grad, global_loss, gnorm2 = \
+        logreg_loss_and_grad(rho=0.1)
+    sched = gossip.theorem3_weight_schedule(n, beta)
+    x0 = jnp.zeros((n, d))
+
+    def grad_fn(xs, key):
+        return stoch_grad(xs, H, y, key, batch)
+
+    def eval_fn(xbar):
+        return gnorm2(xbar, H, y)
+
+    print(f"n={n} beta={beta:.4f} (sun-shaped, rotating centers, "
+          f"|C|={max(1, int(n * (1 - beta)))})  budget T={T_budget}")
+    print(f"{'algo':10s} {'T':>6s} {'||grad f(x_bar)||^2':>22s}")
+    results = {}
+    for name, algo, steps in [
+        ("dsgd", alg.dsgd(gamma), T_budget),
+        ("dsgt", alg.dsgt(gamma), T_budget // 2),
+        ("mc_dsgt", alg.mc_dsgt(gamma, R=R), T_budget // (2 * R)),
+    ]:
+        state, hist = alg.run(algo, x0, grad_fn, sched, steps,
+                              jax.random.key(0), eval_fn=eval_fn,
+                              eval_every=max(1, steps // 8))
+        for t, g in hist[-1:]:
+            print(f"{name:10s} {t:6d} {float(g):22.6f}")
+        results[name] = float(hist[-1][1])
+
+    assert results["mc_dsgt"] <= results["dsgd"], \
+        "MC-DSGT should dominate DSGD on a poorly-connected graph"
+    print("\nMC-DSGT <= DSGD at equal budget: paper Table 1 ordering holds.")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched-serving example: prefill + greedy decode on a reduced SSM model
+(state-space decode is O(1) in context length — the serve-path showcase).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch falcon-mamba-7b
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="falcon-mamba-7b")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args(argv)
+    return serve_main(["--arch", args.arch, "--preset", "reduced",
+                       "--batch", str(args.batch), "--prompt-len", "48",
+                       "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

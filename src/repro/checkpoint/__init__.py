@@ -1,0 +1,1 @@
+from .msgpack_ckpt import load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,45 @@
+"""msgpack-based pytree checkpointing (no external deps beyond msgpack)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {b"dtype": arr.dtype.str.encode(), b"shape": list(arr.shape),
+            b"data": arr.tobytes()}
+
+
+def _unpack_leaf(d):
+    arr = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode()))
+    return jnp.asarray(arr.reshape(d[b"shape"]))
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {b"step": step,
+               b"treedef": str(treedef).encode(),
+               b"leaves": [_pack_leaf(x) for x in leaves]}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (treedef source of truth)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves, treedef = jax.tree.flatten(like)
+    restored = [_unpack_leaf(d) for d in payload[b"leaves"]]
+    assert len(restored) == len(leaves), "checkpoint/tree leaf count mismatch"
+    for a, b in zip(restored, leaves):
+        assert a.shape == b.shape, (a.shape, b.shape)
+    return jax.tree.unflatten(treedef, restored), payload[b"step"]

@@ -1,0 +1,37 @@
+"""Architecture config registry: resolve --arch <id> to a ModelConfig."""
+from .base import INPUT_SHAPES, InputShape, ModelConfig  # noqa: F401
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def names() -> list:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    from . import (  # noqa: F401
+        falcon_mamba_7b,
+        granite_moe_3b_a800m,
+        internvl2_1b,
+        llama4_maverick_400b_a17b,
+        logreg_paper,
+        minitron_4b,
+        nemotron_4_340b,
+        qwen1_5_0_5b,
+        recurrentgemma_2b,
+        whisper_tiny,
+        yi_6b,
+    )

@@ -1,0 +1,25 @@
+"""Core contribution of the paper: time-varying topologies, gossip weight
+matrices, effective diameter, decentralized algorithms (DSGD/DSGT/MC-DSGT)
+and the lower-bound hard instances."""
+
+from . import algorithms, gossip, lower_bound, topology  # noqa: F401
+from .algorithms import dsgd, dsgt, mc_dsgt, mix, multi_consensus, run, warm_start  # noqa: F401
+from .gossip import (  # noqa: F401
+    WeightSchedule,
+    check_assumption3,
+    consensus_contraction,
+    laplacian_rule,
+    metropolis_weights,
+    mixing_beta,
+    schedule_from_topology,
+    theorem3_weight_schedule,
+)
+from .topology import (  # noqa: F401
+    effective_diameter,
+    effective_distance,
+    federated_schedule,
+    one_peer_exponential_schedule,
+    sun_shaped_graph,
+    sun_shaped_schedule,
+    theorem3_distance_formula,
+)

@@ -1,0 +1,172 @@
+"""Gossip weight matrices and multi-consensus (paper §2 Assumption 3, Alg. 2).
+
+Weight-matrix schedules are host-side numpy objects (tiny, n <= 64); the
+values are fed into jitted distributed steps as regular array arguments so a
+single compiled step serves the whole time-varying schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from . import topology as topo
+
+WeightMatrix = np.ndarray  # (n, n) float64
+MatrixSchedule = Callable[[int], WeightMatrix]
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+def graph_laplacian(adj: topo.Adjacency) -> np.ndarray:
+    a = adj.copy().astype(float)
+    np.fill_diagonal(a, 0.0)
+    deg = a.sum(axis=1)
+    return np.diag(deg) - a
+
+
+def laplacian_weights(adj: topo.Adjacency, delta_over_n: float) -> WeightMatrix:
+    """W = I - (delta/n) * L(G) — the Theorem 3 rule (with delta_over_n =
+    delta/n) and, with delta_over_n = 1/d_max, the classic Laplacian rule of
+    Remark 5."""
+    n = adj.shape[0]
+    return np.eye(n) - delta_over_n * graph_laplacian(adj)
+
+
+def laplacian_rule(adj: topo.Adjacency) -> WeightMatrix:
+    """W = I - L / d_max (Remark 5)."""
+    L = graph_laplacian(adj)
+    dmax = float(np.max(np.diag(L)))
+    if dmax == 0:
+        return np.eye(adj.shape[0])
+    return np.eye(adj.shape[0]) - L / dmax
+
+
+def metropolis_weights(adj: topo.Adjacency) -> WeightMatrix:
+    """Metropolis-Hastings doubly-stochastic weights for an undirected graph."""
+    n = adj.shape[0]
+    a = adj.copy()
+    np.fill_diagonal(a, False)
+    deg = a.sum(axis=1)
+    W = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if a[i, j]:
+                W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        W[i, i] = 1.0 - W[i].sum()
+    return W
+
+
+def mixing_beta(W: WeightMatrix) -> float:
+    """beta = ||W - (1/n) 11^T||_2 (Assumption 3.3)."""
+    n = W.shape[0]
+    return float(np.linalg.norm(W - np.ones((n, n)) / n, ord=2))
+
+
+def check_assumption3(W: WeightMatrix, adj: topo.Adjacency | None = None,
+                      beta: float | None = None, atol: float = 1e-9) -> None:
+    """Raise AssertionError unless W satisfies Assumption 3 (sparsity pattern,
+    double stochasticity, spectral bound)."""
+    n = W.shape[0]
+    ones = np.ones(n)
+    if adj is not None:
+        off = ~adj & ~np.eye(n, dtype=bool)
+        assert np.allclose(W[off], 0.0, atol=atol), "W has weight on inactive links"
+    assert np.allclose(W @ ones, ones, atol=atol), "W 1 != 1 (row sums)"
+    assert np.allclose(ones @ W, ones, atol=atol), "1^T W != 1^T (col sums)"
+    b = mixing_beta(W)
+    if beta is not None:
+        assert b <= beta + 1e-7, f"beta(W)={b} exceeds required {beta}"
+    assert b <= 1.0 + 1e-9, f"beta(W)={b} > 1"
+
+
+# ---------------------------------------------------------------------------
+# Matrix schedules built from topology schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WeightSchedule:
+    """A periodic sequence of weight matrices W^t."""
+
+    matrices: tuple  # tuple[np.ndarray]
+
+    @property
+    def n(self) -> int:
+        return self.matrices[0].shape[0]
+
+    @property
+    def period(self) -> int:
+        return len(self.matrices)
+
+    @property
+    def beta(self) -> float:
+        return max(mixing_beta(W) for W in self.matrices)
+
+    def __call__(self, t: int) -> WeightMatrix:
+        return self.matrices[t % len(self.matrices)]
+
+    def stacked(self, t0: int, rounds: int, dtype=np.float32) -> np.ndarray:
+        """(rounds, n, n) array W^{t0}, ..., W^{t0+rounds-1} — the form the
+        jitted distributed step consumes."""
+        return np.stack([self(t0 + r) for r in range(rounds)]).astype(dtype)
+
+
+def schedule_from_topology(schedule, rule: str = "metropolis") -> WeightSchedule:
+    """Build a weight schedule from a (periodic) topology schedule.
+
+    Default rule is Metropolis-Hastings: unlike I - L/d_max it stays a
+    strict average on degree-1 graphs (matchings), where the Laplacian rule
+    degenerates to a pure swap with no contraction."""
+    period = getattr(schedule, "period", 1)
+    mats = []
+    for t in range(period):
+        adj = schedule(t)
+        if rule == "laplacian_dmax":
+            W = laplacian_rule(adj)
+        elif rule == "metropolis":
+            W = metropolis_weights(adj)
+        else:
+            raise ValueError(f"unknown rule {rule!r}")
+        mats.append(W)
+    return WeightSchedule(tuple(mats))
+
+
+def theorem3_weight_schedule(n: int, beta: float, avoid: Sequence[int] = ()) -> WeightSchedule:
+    """The exact Theorem 3 matrices: W^t = I - (delta/n) L(S_{n,C^t}) with
+    delta = n(1-beta)/ceil(n(1-beta)), giving ||W - 11^T/n||_2 = beta."""
+    graphs = topo.sun_shaped_schedule(n, beta, avoid=avoid)
+    k = int(math.ceil(n * (1.0 - beta)))
+    if k >= n:
+        W = beta * np.eye(n) + (1.0 - beta) * np.ones((n, n)) / n
+        return WeightSchedule((W,))
+    delta = n * (1.0 - beta) / k
+    mats = tuple(
+        laplacian_weights(graphs(t), delta / n) for t in range(graphs.period)
+    )
+    return WeightSchedule(mats)
+
+
+# ---------------------------------------------------------------------------
+# Multi-consensus (Algorithm 2) — host/matrix form
+# ---------------------------------------------------------------------------
+
+def multi_consensus(z: np.ndarray, schedule: MatrixSchedule, t1: int, t2: int) -> np.ndarray:
+    """z^{(t2)} = W^{t2-1} ... W^{t1} z^{(t1)}  (Algorithm 2)."""
+    out = z
+    for t in range(t1, t2):
+        out = schedule(t) @ out
+    return out
+
+
+def consensus_contraction(schedule: WeightSchedule, rounds: int) -> float:
+    """||prod_{t<rounds} W^t - 11^T/n||_2 — should be <= beta^rounds (eq. 21)."""
+    n = schedule.n
+    P = np.eye(n)
+    for t in range(rounds):
+        P = schedule(t) @ P
+    return float(np.linalg.norm(P - np.ones((n, n)) / n, ord=2))

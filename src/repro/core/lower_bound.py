@@ -1,0 +1,165 @@
+"""Zero-chain hard instances for the lower bound (paper Appendix B).
+
+Implements the Carmon et al. component functions (Lemma 7), their odd/even
+splits (Lemma 8), the progress measure ``prog``, and the two adversarial
+instances of Theorem 4:
+
+* Instance 1 — homogeneous f_i with the coordinate-masking Bernoulli oracle
+  (drives the statistical term sqrt(Delta L sigma^2 / nT)).
+* Instance 2 — odd/even split functions assigned to two far-apart node sets
+  I1, I2 on the sun-shaped schedule (drives the network term
+  Delta L / (T (1 - beta))).
+
+These are *analysis* objects used by tests/benchmarks to validate the bound
+empirically; they are not on the production training path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtr
+
+# Lemma 7 constants
+DELTA0 = 12.0    # h(0) - inf h <= DELTA0 * d
+ELL0 = 152.0     # smoothness of h
+G_INF = 23.0     # sup ||grad h||_inf
+
+
+def psi(z: jax.Array) -> jax.Array:
+    """psi(z) = exp(1 - 1/(2z-1)^2) for z > 1/2, else 0 (safe for autodiff)."""
+    z = jnp.asarray(z, jnp.float64) if jax.config.jax_enable_x64 else jnp.asarray(z, jnp.float32)
+    safe = jnp.where(z > 0.5, z, 0.75)  # keep denominator away from 0
+    val = jnp.exp(1.0 - 1.0 / (2.0 * safe - 1.0) ** 2)
+    return jnp.where(z > 0.5, val, 0.0)
+
+
+def phi(z: jax.Array) -> jax.Array:
+    """phi(z) = sqrt(e) * int_{-inf}^z exp(-t^2/2) dt = sqrt(2 pi e) * ndtr(z)."""
+    return math.sqrt(2.0 * math.pi * math.e) * ndtr(z)
+
+
+def _chain_terms(x: jax.Array) -> jax.Array:
+    """terms[j] = psi(-x_j) phi(-x_{j+1}) - psi(x_j) phi(x_{j+1}), j = 0..d-2."""
+    a, b = x[:-1], x[1:]
+    return psi(-a) * phi(-b) - psi(a) * phi(b)
+
+
+def h(x: jax.Array) -> jax.Array:
+    """Lemma 7 zero-chain function."""
+    return -psi(1.0) * phi(x[0]) + jnp.sum(_chain_terms(x))
+
+
+def h1(x: jax.Array) -> jax.Array:
+    """Lemma 8: even-j links (j = 2, 4, ... in 1-based indexing) + head term."""
+    terms = _chain_terms(x)                      # index j-1 for 1-based j
+    d = x.shape[0]
+    j = jnp.arange(1, d)                         # 1-based link index
+    even = (j % 2 == 0).astype(terms.dtype)
+    return -2.0 * psi(1.0) * phi(x[0]) + 2.0 * jnp.sum(terms * even)
+
+
+def h2(x: jax.Array) -> jax.Array:
+    """Lemma 8: odd-j links."""
+    terms = _chain_terms(x)
+    d = x.shape[0]
+    j = jnp.arange(1, d)
+    odd = (j % 2 == 1).astype(terms.dtype)
+    return 2.0 * jnp.sum(terms * odd)
+
+
+def prog(x: jax.Array) -> jax.Array:
+    """prog(x) = max{j : x_j != 0} (1-based), 0 if x = 0."""
+    d = x.shape[-1]
+    idx = jnp.arange(1, d + 1)
+    return jnp.max(jnp.where(x != 0, idx, 0), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Instance 1: homogeneous functions + Bernoulli coordinate-masking oracle
+# ---------------------------------------------------------------------------
+
+class Instance1(NamedTuple):
+    d: int
+    lam: float
+    L: float
+    p: float
+
+    def f(self, x: jax.Array) -> jax.Array:
+        return (self.L * self.lam ** 2 / ELL0) * h(x / self.lam)
+
+    def grad_f(self, x: jax.Array) -> jax.Array:
+        return jax.grad(self.f)(x)
+
+    def oracle(self, x: jax.Array, key: jax.Array) -> jax.Array:
+        """[O(x; Z)]_j = [grad f(x)]_j (1 + 1{j > prog(x)} (Z/p - 1))."""
+        g = self.grad_f(x)
+        z = jax.random.bernoulli(key, self.p).astype(g.dtype)
+        j = jnp.arange(1, self.d + 1)
+        mask = (j > prog(x)).astype(g.dtype)
+        return g * (1.0 + mask * (z / self.p - 1.0))
+
+
+def make_instance1(L: float, Delta: float, sigma: float, n: int, T: int) -> Instance1:
+    """Parameter choices from Appendix B.1, Instance 1 (Step 3)."""
+    lam = (ELL0 / L) * (Delta * L * sigma ** 2 / (3 * n * T * ELL0 * DELTA0 * G_INF ** 2)) ** 0.25
+    d = max(2, int((3 * L * Delta * n * T * G_INF ** 2 / (sigma ** 2 * ELL0 * DELTA0)) ** 0.5))
+    p = min(L ** 2 * lam ** 2 * G_INF ** 2 / (ELL0 ** 2 * sigma ** 2), 1.0)
+    return Instance1(d=d, lam=lam, L=L, p=p)
+
+
+# ---------------------------------------------------------------------------
+# Instance 2: odd/even split functions on far-apart node sets
+# ---------------------------------------------------------------------------
+
+class Instance2(NamedTuple):
+    n: int
+    d: int
+    lam: float
+    L: float
+
+    @property
+    def set1(self) -> tuple:
+        return tuple(range(0, math.ceil(self.n / 4)))           # I1 (0-based)
+
+    @property
+    def set2(self) -> tuple:
+        return tuple(range(self.n - math.ceil(self.n / 4), self.n))  # I2
+
+    def _scale(self) -> float:
+        return self.n / math.ceil(self.n / 4)
+
+    def f_i(self, i: int, x: jax.Array) -> jax.Array:
+        c = self.L * self.lam ** 2 / (2 * ELL0)
+        s = self._scale()
+        if i in self.set1:
+            return c * (s / 2.0) * h1(x / self.lam)
+        if i in self.set2:
+            return c * (s / 2.0) * h2(x / self.lam)
+        return jnp.zeros((), x.dtype)
+
+    def f(self, x: jax.Array) -> jax.Array:
+        """Global average = L lam^2 h(x/lam) / (2 ell0) * (scale*|I|/n) = ..."""
+        vals = [self.f_i(i, x) for i in range(self.n)]
+        return sum(vals) / self.n
+
+    def grad_stacked(self, xs: jax.Array) -> jax.Array:
+        """Full-batch per-node gradients for stacked models xs: (n, d)."""
+        def g_one(i, x):
+            return jax.grad(lambda y: self.f_i(i, y))(x)
+        return jnp.stack([g_one(i, xs[i]) for i in range(self.n)])
+
+
+def make_instance2(L: float, Delta: float, n: int, beta: float, T: int,
+                   C: float = 1.0) -> Instance2:
+    """Parameter choices from Appendix B.1, Instance 2 (Step 3)."""
+    d = max(2, int(C * (1 - beta) * T) + 2)
+    lam = (2 * ELL0 / L) * math.sqrt(
+        2 * Delta * L / (3 * C * (1 - beta) * T * 2 * ELL0 * DELTA0)) / 2
+    # ensure the Delta budget (14): d * lam^2 <= 2 ell0 Delta / (L DELTA0)
+    cap = math.sqrt(2 * ELL0 * Delta / (L * DELTA0 * d))
+    lam = min(lam, cap)
+    return Instance2(n=n, d=d, lam=lam, L=L)

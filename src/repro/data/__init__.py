@@ -1,0 +1,1 @@
+from .synthetic import TokenStream, logreg_dataset, logreg_loss_and_grad, token_stream_for  # noqa: F401

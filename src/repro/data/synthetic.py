@@ -1,0 +1,136 @@
+"""Data pipeline.
+
+Two producers:
+
+* ``TokenStream`` — deterministic synthetic LM token batches, shaped for the
+  decentralized trainer: (n_nodes, R, batch, seq) so each node's R gradient
+  accumulation rounds see distinct microbatches (Assumption 2's independent
+  oracle queries).  Per-node PRNG folding keeps node i's stream independent
+  of n or the host count.
+
+* ``logreg_dataset`` — the paper's §6 protocol: binary classification data
+  partitioned *heterogeneously* (a half of the nodes hold 80% positive
+  samples, the other half 80% negative).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab_size: int
+    n_nodes: int
+    rounds: int            # R microbatches per step
+    batch: int             # per-node, per-round sequences
+    seq: int
+    seed: int = 0
+    active_vocab: int = 0          # 0 = full vocab; else restrict to first k
+                                   # tokens (learnable low-entropy stream)
+    arch_type: str = "dense"
+    d_model: int = 0
+    frontend_tokens: int = 0
+    encoder_seq: int = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        shape = (self.n_nodes, self.rounds, self.batch, self.seq)
+        hi = self.active_vocab or self.vocab_size
+        tokens = jax.random.randint(key, shape, 0, hi, jnp.int32)
+        out = {"tokens": tokens}
+        if self.arch_type == "vlm":
+            kp = jax.random.fold_in(key, 1)
+            out["prefix_embeds"] = 0.02 * jax.random.normal(
+                kp, shape[:3] + (self.frontend_tokens, self.d_model))
+            out["tokens"] = tokens[..., :self.seq - self.frontend_tokens]
+        elif self.arch_type == "audio":
+            kp = jax.random.fold_in(key, 2)
+            out["frames"] = 0.02 * jax.random.normal(
+                kp, shape[:3] + (self.encoder_seq, self.d_model))
+        return out
+
+
+def token_stream_for(cfg, n_nodes: int, rounds: int, batch: int, seq: int,
+                     seed: int = 0, active_vocab: int = 0) -> TokenStream:
+    return TokenStream(vocab_size=cfg.vocab_size, n_nodes=n_nodes,
+                       rounds=rounds, batch=batch, seq=seq, seed=seed,
+                       active_vocab=active_vocab,
+                       arch_type=cfg.arch_type, d_model=cfg.d_model,
+                       frontend_tokens=cfg.frontend_tokens,
+                       encoder_seq=cfg.encoder_seq)
+
+
+# ---------------------------------------------------------------------------
+# Paper §6: heterogeneous logistic-regression data
+# ---------------------------------------------------------------------------
+
+def logreg_dataset(n_nodes: int, m: int, d: int, *, positive_frac: float = 0.8,
+                   margin: float = 1.0, seed: int = 0):
+    """Synthetic linearly-separable-ish binary data, partitioned so that the
+    first half of the nodes hold ``positive_frac`` positive datapoints and
+    the second half the mirror (the paper's 80/20 protocol).
+
+    Returns (H, y): H (n_nodes, m, d) features, y (n_nodes, m) in {-1, +1}.
+    """
+    rng = np.random.default_rng(seed)
+    w_star = rng.normal(size=d) / np.sqrt(d)
+    feats = np.zeros((n_nodes, m, d), np.float32)
+    labels = np.zeros((n_nodes, m), np.float32)
+    for i in range(n_nodes):
+        frac = positive_frac if i < n_nodes // 2 else 1.0 - positive_frac
+        n_pos = int(round(frac * m))
+        y = np.concatenate([np.ones(n_pos), -np.ones(m - n_pos)])
+        rng.shuffle(y)
+        base = rng.normal(size=(m, d)).astype(np.float32)
+        # push features to the correct side of the separator + noise
+        proj = base @ w_star
+        base += np.outer((margin * y - proj) * 0.9, w_star) / (w_star @ w_star)
+        feats[i] = base
+        labels[i] = y
+    return jnp.asarray(feats), jnp.asarray(labels)
+
+
+def logreg_loss_and_grad(rho: float):
+    """Loss/gradient factory for the §6 objective:
+    f_i(x) = mean_j ln(1 + exp(-y_ij <h_ij, x>)) + rho * sum_k x_k^2/(1+x_k^2).
+    """
+
+    def loss_i(x, H_i, y_i):
+        z = -y_i * (H_i @ x)
+        data = jnp.mean(jnp.logaddexp(0.0, z))
+        reg = rho * jnp.sum(x ** 2 / (1.0 + x ** 2))
+        return data + reg
+
+    def full_grad(xs, H, y):
+        """xs: (n, d) stacked models -> per-node full-batch gradients."""
+        return jax.vmap(jax.grad(loss_i))(xs, H, y)
+
+    def stochastic_grad(xs, H, y, key, batch: int):
+        """Minibatch oracle: sample `batch` indices per node."""
+        n, m, d = H.shape
+        idx = jax.random.randint(key, (n, batch), 0, m)
+        Hb = jnp.take_along_axis(H, idx[..., None], axis=1)
+        yb = jnp.take_along_axis(y, idx, axis=1)
+        return jax.vmap(jax.grad(loss_i))(xs, Hb, yb)
+
+    def global_loss(x, H, y):
+        n = H.shape[0]
+        return jnp.mean(jax.vmap(lambda Hi, yi: loss_i(x, Hi, yi))(H, y))
+
+    def global_grad_norm_sq(x, H, y):
+        g = jax.grad(lambda xx: global_loss(xx, H, y))(x)
+        return jnp.sum(g ** 2)
+
+    return loss_i, full_grad, stochastic_grad, global_loss, global_grad_norm_sq

@@ -1,0 +1,105 @@
+"""Single-token decode attention Pallas TPU kernel (the serve_step hot spot).
+
+One query token per sequence attends to the (possibly ring-buffered) KV
+cache.  Decode is memory-bound — arithmetic intensity ~1 — so the kernel's
+job is to stream k/v through VMEM exactly once per step with the masking
+(kpos validity, causality vs the current position, optional sliding window)
+fused in, instead of materializing masked score tensors in HBM.
+
+Grid: (batch, kv_heads, num_k_blocks); the k-block axis is innermost /
+sequential, carrying the online-softmax state for all G = H/KV query heads
+of the kv head in VMEM scratch.  BlockSpec streams (block_k, hd) cache
+tiles; the (G, hd) query tile stays resident.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kpos_ref, pos_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, window, num_k_blocks):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :]                     # (G, hd)
+    k = k_ref[0, :, 0, :]                     # (bk, hd)
+    v = v_ref[0, :, 0, :]
+    kpos = kpos_ref[...]                      # (bk,)
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kpos, pos, *, window=0, block_k=256,
+                     interpret=False):
+    """q: (B, 1, J, G, hd); k, v: (B, C, J, hd); kpos: (C,) int32 absolute
+    positions (-1 = empty slot); pos: scalar int32 current position.
+    Returns (B, 1, J*G, hd) — matches repro.models.attention.decode_attend.
+    """
+    B, _, J, G, hd = q.shape
+    C = k.shape[1]
+    bk = min(block_k, C)
+    assert C % bk == 0, (C, bk)
+    nk = C // bk
+    scale = 1.0 / math.sqrt(hd)
+    q2 = q.reshape(B, J, G, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               num_k_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, J, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, j, i: (b, j, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, j, i: (b, i, j, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, j, i: (b, i, j, 0)),
+            pl.BlockSpec((bk,), lambda b, j, i: (i,)),
+            pl.BlockSpec((1,), lambda b, j, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, j, i: (b, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, J, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q2, k, v, kpos, pos_arr)
+    return out.reshape(B, 1, J * G, hd)

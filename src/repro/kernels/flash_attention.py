@@ -1,0 +1,107 @@
+"""Flash attention Pallas TPU kernel (blockwise online softmax, GQA,
+optional causal + sliding-window masking).
+
+Grid: (batch, q_heads, num_q_blocks, num_k_blocks); the k-block axis is the
+innermost (sequential on TPU), carrying the online-softmax state (m, l, acc)
+in VMEM scratch.  BlockSpecs tile q/k/v into (block_q|block_k, head_dim)
+VMEM tiles; head_dim should be a multiple of 128 on real hardware for MXU
+alignment (the kernel itself is shape-agnostic).
+
+TARGET: TPU.  Validated on CPU via interpret=True (see tests/test_kernels.py);
+the model's jnp reference path (ref.py) is used for dry-run lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, block_q, block_k, num_k_blocks):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :]                      # (bq, hd)
+    k = k_ref[0, :, 0, :]                      # (bk, hd)
+    v = v_ref[0, :, 0, :]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with KV dividing H.
+    Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, num_k_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,80 @@
+"""Chunked diagonal linear recurrence Pallas TPU kernel.
+
+Computes h_t = a_t * h_{t-1} + b_t along the time axis for flattened channel
+blocks.  Serves both sequence mixers of the assigned architectures:
+
+* mamba1 selective scan (channels = d_inner * ssm_state), and
+* RG-LRU (channels = lru_width).
+
+Grid: (batch, channel_blocks, time_chunks) — the time axis is innermost /
+sequential, carrying the running state in VMEM scratch; inside a chunk the
+recurrence runs as a fori_loop of VPU-width vector ops over ``block_t``
+steps (the classic TPU linear-scan shape, cf. RecurrentGemma's kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h_all_ref, h_last_ref, h_ref, *, block_t, num_t):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)       # (bt, bc)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h_new = a[t] * h + b[t]
+        h_all_ref[0, t, :] = h_new.astype(h_all_ref.dtype)
+        return h_new
+
+    h = jax.lax.fori_loop(0, block_t, step, h_ref[0])
+    h_ref[0] = h
+
+    @pl.when(ti == num_t - 1)
+    def _done():
+        h_last_ref[0] = h.astype(h_last_ref.dtype)
+
+
+def linear_recurrence(a, b, *, block_t=128, block_c=512, interpret=False):
+    """a, b: (B, S, C) -> (h_all (B, S, C), h_last (B, C)).
+
+    Zero initial state (callers fold h0 into b_0 if needed: b_0 += a_0*h0).
+    """
+    B, S, C = a.shape
+    bt = min(block_t, S)
+    bc = min(block_c, C)
+    assert S % bt == 0 and C % bc == 0, (S, bt, C, bc)
+    nt, nc = S // bt, C // bc
+
+    kernel = functools.partial(_kernel, block_t=bt, num_t=nt)
+    h_all, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nc, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bc), lambda bi, ci, ti: (bi, ti, ci)),
+            pl.BlockSpec((1, bt, bc), lambda bi, ci, ti: (bi, ti, ci)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bc), lambda bi, ci, ti: (bi, ti, ci)),
+            pl.BlockSpec((1, bc), lambda bi, ci, ti: (bi, ci)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, C), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+    return h_all, h_last

@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``use_pallas`` selects the kernel path; on this CPU container kernels run
+with interpret=True (Python interpretation of the kernel body).  On real
+TPU hardware set ``interpret=False``.  The model code calls through these
+wrappers so a single flag flips the whole model between the jnp reference
+path (used for dry-run lowering) and the kernel path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .gossip_matmul import gossip_mix as _gossip
+from .linear_recurrence import linear_recurrence as _linrec
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                             "interpret", "block_q", "block_k"))
+def attention(q, k, v, *, causal=True, window=0, use_pallas=False,
+              interpret=True, block_q=128, block_k=128):
+    if use_pallas:
+        return _flash(q, k, v, causal=causal, window=window,
+                      block_q=block_q, block_k=block_k, interpret=interpret)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_pallas",
+                                             "interpret", "block_k"))
+def decode_attention(q, k, v, kpos, pos, *, window=0, use_pallas=False,
+                     interpret=True, block_k=256):
+    if use_pallas:
+        return _decode(q, k, v, kpos, pos, window=window, block_k=block_k,
+                       interpret=interpret)
+    return ref.decode_attention_ref(q, k, v, kpos, pos, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_t", "block_c"))
+def linear_recurrence(a, b, *, use_pallas=False, interpret=True,
+                      block_t=128, block_c=512):
+    if use_pallas:
+        return _linrec(a, b, block_t=block_t, block_c=block_c,
+                       interpret=interpret)
+    return ref.linear_recurrence_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_d"))
+def gossip_mix(ws, x, *, use_pallas=False, interpret=True, block_d=1024):
+    if use_pallas:
+        return _gossip(ws, x, block_d=block_d, interpret=interpret)
+    return ref.gossip_mix_ref(ws, x)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the dry-run lowering path and
+the allclose targets in tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqjgh,bkjh->bjgqk", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bjgqk,bkjh->bqjgh", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def decode_attention_ref(q, k, v, kpos, pos, *, window=0):
+    """q: (B,1,J,G,hd); k,v: (B,C,J,hd); kpos: (C,); pos: scalar."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqjgh,bkjh->bjgqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    mask = (kpos >= 0) & (kpos <= pos)
+    if window:
+        mask &= kpos > pos - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bjgqk,bkjh->bqjgh", p.astype(v.dtype), v)
+    B, _, J, G, _ = q.shape
+    return o.reshape(B, 1, J * G, hd)
+
+
+def linear_recurrence_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t, h_{-1} = 0.  a, b: (B, S, C)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a32 = a.astype(jnp.float32).swapaxes(0, 1)
+    b32 = b.astype(jnp.float32).swapaxes(0, 1)
+    h0 = jnp.zeros(a.shape[::2], jnp.float32)  # (B, C)
+    h_last, h_all = jax.lax.scan(step, h0, (a32, b32))
+    return h_all.swapaxes(0, 1), h_last
+
+
+def gossip_mix_ref(ws, x):
+    """ws: (R, n, n); x: (n, D)."""
+    out = x.astype(jnp.float32)
+    for r in range(ws.shape[0]):
+        out = ws[r].astype(jnp.float32) @ out
+    return out.astype(x.dtype)

@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Performance hillclimb (deliverable g §Perf): lower baseline and optimized
+variants of the three chosen (arch x shape) pairs, compare roofline terms.
+
+Pairs (chosen from the baseline roofline table):
+  1. nemotron-4-340b x train_4k  — most collective-bound; also most
+     representative of the paper's technique (multi-consensus gossip over
+     340B params dominates).
+  2. granite-moe-3b-a800m x prefill_32k — worst roofline fraction: the MoE
+     einsum dispatch at 1M tokens explodes the memory term.
+  3. internvl2-1b x prefill_32k — collective-bound through the replicated
+     non-divisible-vocab unembed of the full 32k positions.
+
+Variants are opt-in config/step flags (defaults = paper-faithful baseline):
+  sun-gossip     gossip_impl='sun'  — structured all-reduce gossip, exact
+                 for sun-shaped W (O(2V) wire vs O(nV) gather)
+  moe-group      cfg.moe_seq_group=4096 — per-group MoE dispatch
+  last-unembed   cfg.prefill_last_only=True — unembed 1 position at prefill
+  bf16-state     aux_dtype=bf16 — MC-DSGT tracker/accumulator in bf16
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.hillclimb [--pair N] [--out FILE]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax.numpy as jnp
+
+from repro.launch.dryrun import lower_one
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_hierarchical_mesh
+
+
+def terms(rec: dict) -> dict:
+    return {
+        "compute_s": rec["flops"] / PEAK_FLOPS_BF16,
+        "memory_s": rec["bytes_accessed"] / HBM_BW,
+        "collective_s": rec["collectives"]["total_bytes"] / ICI_BW,
+        "peak_hbm_frac": rec["memory"]["peak_bytes"] / 16e9,
+    }
+
+
+PAIRS = {
+    "nemotron-train": dict(
+        arch="nemotron-4-340b", shape="train_4k",
+        variants={
+            "baseline": {},
+            "sun-gossip": {"train_kwargs": {"gossip_impl": "sun",
+                                            "sun_delta": 1.0}},
+            "bf16-state": {"train_kwargs": {"aux_dtype": jnp.bfloat16}},
+            "sun+bf16": {"train_kwargs": {"gossip_impl": "sun",
+                                          "sun_delta": 1.0,
+                                          "aux_dtype": jnp.bfloat16}},
+            "sun+bf16+hier4x64": {"train_kwargs": {"gossip_impl": "sun",
+                                                   "sun_delta": 1.0,
+                                                   "aux_dtype": jnp.bfloat16},
+                                  "mesh_builder": lambda: make_hierarchical_mesh(4, 4, 16)},
+        }),
+    "granite-prefill": dict(
+        arch="granite-moe-3b-a800m", shape="prefill_32k",
+        variants={
+            "baseline": {},
+            "moe-group4k": {"cfg_transform": lambda c: dataclasses.replace(
+                c, moe_seq_group=4096)},
+            "moe-group4k+last": {"cfg_transform": lambda c: dataclasses.replace(
+                c, moe_seq_group=4096, prefill_last_only=True)},
+            "grp+last+replattn": {"cfg_transform": lambda c: dataclasses.replace(
+                c, moe_seq_group=4096, prefill_last_only=True,
+                attn_shard_fallback="replicate")},
+            "grp+last+ra+pad48": {"cfg_transform": lambda c: dataclasses.replace(
+                c, moe_seq_group=4096, prefill_last_only=True,
+                attn_shard_fallback="replicate", moe_pad_experts=48)},
+        }),
+    "internvl2-prefill": dict(
+        arch="internvl2-1b", shape="prefill_32k",
+        variants={
+            "baseline": {},
+            "last-unembed": {"cfg_transform": lambda c: dataclasses.replace(
+                c, prefill_last_only=True)},
+            "last+repl-attn": {"cfg_transform": lambda c: dataclasses.replace(
+                c, prefill_last_only=True, attn_shard_fallback="replicate")},
+        }),
+}
+
+
+def run_pair(name: str, spec: dict, out: dict):
+    print(f"=== {name}: {spec['arch']} x {spec['shape']} ===", flush=True)
+    for vname, kw in spec["variants"].items():
+        t0 = time.time()
+        rec = lower_one(spec["arch"], spec["shape"], verbose=False,
+                        cfg_transform=kw.get("cfg_transform"),
+                        train_kwargs=kw.get("train_kwargs"),
+                        mesh_builder=kw.get("mesh_builder"))
+        tt = terms(rec)
+        out.setdefault(name, {})[vname] = {**tt,
+                                           "flops": rec["flops"],
+                                           "bytes": rec["bytes_accessed"],
+                                           "coll_bytes": rec["collectives"]["total_bytes"],
+                                           "coll_per_op": rec["collectives"].get("per_op"),
+                                           "compile_s": rec["compile_seconds"]}
+        print(f"  {vname:18s} compute {tt['compute_s']:.3e}s  "
+              f"memory {tt['memory_s']:.3e}s  "
+              f"collective {tt['collective_s']:.3e}s  "
+              f"hbm {tt['peak_hbm_frac']:.2f}  "
+              f"({time.time() - t0:.0f}s to lower)", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None, choices=list(PAIRS) + [None])
+    ap.add_argument("--out", default="experiments/hillclimb.json")
+    args = ap.parse_args()
+    results = {}
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    pairs = {args.pair: PAIRS[args.pair]} if args.pair else PAIRS
+    for name, spec in pairs.items():
+        run_pair(name, spec, results)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

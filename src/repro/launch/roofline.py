@@ -1,0 +1,143 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun), derives
+the three roofline terms per (arch x shape x mesh) and emits a markdown
+table plus per-pair bottleneck classification.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis on the SPMD-partitioned module is per-device; verified by
+halving per-device flops when doubling the pod count.)
+
+MODEL_FLOPS uses 6*N*D for training (2ND fwd + 4ND bwd) and 2*N*D for
+inference, with N_active for MoE.  The utilization column
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import build
+
+V5E_HBM_BYTES = 16e9
+
+
+def _param_counts(cfg):
+    """(total, active) parameter counts via eval_shape (no allocation)."""
+    model = build(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0), jnp.bfloat16))
+    total = sum(int(x.size) for x in jax.tree.leaves(params))
+    active = total
+    if cfg.num_experts and cfg.experts_per_token:
+        # each token runs k of E experts
+        def expert_size(tree):
+            out = 0
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                names = [str(getattr(k, "key", k)) for k in path]
+                if "moe" in names and names[-1] in ("wi", "wg", "wo"):
+                    out += int(leaf.size)
+            return out
+        es = expert_size(params)
+        active = total - es + es * cfg.experts_per_token / cfg.num_experts
+    return total, active
+
+
+def model_flops_per_device(cfg, shape, devices: int, train_nodes: int,
+                           R: int = 2) -> float:
+    total, active = _param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens / devices
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch / devices
+
+
+def analyse(record: dict, R: int = 2) -> dict:
+    cfg = configs.get(record["arch"])
+    shape = configs.INPUT_SHAPES[record["shape"]]
+    devices = record["devices"]
+    n_nodes = 32 if record["mesh"] == "2x16x16" else 16
+
+    t_compute = record["flops"] / PEAK_FLOPS_BF16
+    t_memory = record["bytes_accessed"] / HBM_BW
+    t_coll = record["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(cfg, shape, devices, n_nodes, R)
+    useful = mf / record["flops"] if record["flops"] > 0 else 0.0
+    peak = record["memory"]["peak_bytes"]
+    return {
+        **record,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": useful,
+        "fits_hbm": peak <= V5E_HBM_BYTES,
+        "hbm_frac": peak / V5E_HBM_BYTES,
+    }
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful FLOPs | HBM frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                 f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+                 f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+                 f"| {r['useful_flops_ratio']:.2f} "
+                 f"| {r['hbm_frac']:.2f}{'' if r['fits_hbm'] else ' ⚠OVER'} |\n")
+    return hdr + body
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(path))
+        if args.mesh != "all" and rec["mesh"] != args.mesh:
+            continue
+        rows.append(analyse(rec))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    table = markdown_table(rows)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+    # summary of the three most interesting pairs
+    if rows:
+        coll_bound = max(rows, key=lambda r: r["t_collective_s"]
+                         / max(sum((r["t_compute_s"], r["t_memory_s"],
+                                    r["t_collective_s"])), 1e-30))
+        worst_useful = min((r for r in rows if r["shape"] == "train_4k"),
+                           key=lambda r: r["useful_flops_ratio"], default=None)
+        print(f"\nmost collective-bound: {coll_bound['arch']}/{coll_bound['shape']}")
+        if worst_useful:
+            print(f"worst useful-FLOPs (train): {worst_useful['arch']} "
+                  f"({worst_useful['useful_flops_ratio']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model substrate: layers, attention, MoE, SSM, RG-LRU, transformer and
+encoder-decoder assemblies, and the unified build API."""
+
+from . import attention, encdec, layers, model, moe, rglru, ssm, transformer  # noqa: F401
+from .model import Model, build, decode_templates, materialize_batch, train_batch_template  # noqa: F401

@@ -1,0 +1,218 @@
+"""GQA attention: chunked full-causal, block-local sliding-window (exact,
+sub-quadratic), single-token decode against a ring-buffer KV cache, and
+bidirectional/cross variants for the encoder-decoder arch.
+
+Shapes: x (B, S, D); q (B, S, KV, G, hd) with G = H // KV; k, v (B, S, KV, hd).
+The KV cache stores absolute positions alongside keys so the same masking
+logic serves append caches (full attention) and ring buffers (sliding
+window): ``mask = (kpos >= 0) & (kpos <= q_pos) & (kpos > q_pos - window)``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype, q_dim: Optional[int] = None) -> dict:
+    D = q_dim or cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers._dense_init(ks[0], (D, H, hd), D, dtype),
+        "wk": layers._dense_init(ks[1], (D, KV, hd), D, dtype),
+        "wv": layers._dense_init(ks[2], (D, KV, hd), D, dtype),
+        "wo": layers._dense_init(ks[3], (H, hd, D), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    return p
+
+
+def project_q(p, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    B, S, H, hd = q.shape
+    KV = cfg.num_kv_heads
+    return q.reshape(B, S, KV, H // KV, hd)
+
+
+def project_kv(p, x):
+    k = jnp.einsum("bsd,djk->bsjk", x, p["wk"])
+    v = jnp.einsum("bsd,djk->bsjk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def out_proj(p, o, cfg):
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _softcap(s, cap):
+    return cap * jnp.tanh(s / cap) if cap else s
+
+
+def _sdpa(q, k, v, mask, scale, softcap):
+    """q (B,Sq,J,G,hd); k,v (B,Sk,J,hd); mask broadcastable to (B,J,G,Sq,Sk)."""
+    s = jnp.einsum("bqjgh,bkjh->bjgqk", q, k).astype(jnp.float32) * scale
+    s = _softcap(s, softcap)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bjgqk,bkjh->bqjgh", p.astype(v.dtype), v)
+    return o
+
+
+def attend_full(q, k, v, q_pos, k_pos, *, causal=True, window=0, softcap=0.0,
+                q_chunk=1024):
+    """Chunked-over-queries attention; peak activation O(Sq_chunk * Sk)."""
+    B, Sq, J, G, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    if Sq <= q_chunk:
+        mask = _pos_mask(q_pos, k_pos, causal, window)
+        o = _sdpa(q, k, v, mask, scale, softcap)
+        return o.reshape(B, Sq, J * G, hd)
+
+    pad = (-Sq) % q_chunk
+    if pad:  # pad queries (masked rows are sliced away below)
+        q = jnp.pad(q, [(0, 0), (0, pad)] + [(0, 0)] * 3)
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+    Sp = q.shape[1]
+    nc = Sp // q_chunk
+    qs = q.reshape(B, nc, q_chunk, J, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(nc, q_chunk)
+
+    @jax.checkpoint
+    def one(args):
+        qc, qpc = args
+        mask = _pos_mask(qpc, k_pos, causal, window)
+        return _sdpa(qc, k, v, mask, scale, softcap)
+
+    o = jax.lax.map(one, (qs, qp))
+    o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, J * G, hd)
+    return o[:, :Sq]
+
+
+def _pos_mask(q_pos, k_pos, causal, window):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m[None, None, None]  # (1,1,1,Sq,Sk)
+
+
+def attend_sliding_block(q, k, v, q_pos, *, window, softcap=0.0):
+    """Exact sliding-window causal attention in O(S * 2w): queries in blocks
+    of w attend to their own and the previous key block."""
+    B, S, J, G, hd = q.shape
+    w = window
+    scale = 1.0 / math.sqrt(hd)
+    pad = (-S) % w
+    if pad:
+        padc = [(0, 0), (0, pad)] + [(0, 0)] * 3
+        q = jnp.pad(q, padc)
+        k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-10 * w)
+    Sp = q.shape[1]
+    nb = Sp // w
+    qb = q.reshape(B, nb, w, J, G, hd)
+    kb = k.reshape(B, nb, w, J, hd)
+    vb = v.reshape(B, nb, w, J, hd)
+    # previous key block (block -1 = zeros, masked out by position)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B, nb, 2w, J, hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    qp = q_pos.reshape(nb, w)
+    # key positions come from the *block structure* (padded rows marked -1),
+    # not from qp - w, which breaks when the final block is padding
+    kpos = jnp.where(jnp.arange(Sp) < S, jnp.arange(Sp), -1)
+    kpb = kpos.reshape(nb, w)
+    kp_prev = jnp.concatenate([jnp.full((1, w), -1, kpb.dtype), kpb[:-1]],
+                              axis=0)
+    kp = jnp.concatenate([kp_prev, kpb], axis=1)  # (nb, 2w)
+    mask = (kp[:, None, :] <= qp[:, :, None]) & (kp[:, None, :] > qp[:, :, None] - w)
+    mask &= kp[:, None, :] >= 0
+    mask = mask[None, :, None, None]  # (1, nb, 1, 1, w, 2w)
+    s = jnp.einsum("bnqjgh,bnkjh->bnjgqk", qb, k2).astype(jnp.float32) * scale
+    s = _softcap(s, softcap)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnjgqk,bnkjh->bnqjgh", p.astype(v2.dtype), v2)
+    o = o.reshape(B, Sp, J * G, hd)
+    return o[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    """Cache for one attention layer.  ``max_len`` = window size for
+    sliding-window layers (ring buffer), else the full context length."""
+    C = min(cfg.window, max_len) if cfg.window else max_len
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, C, KV, hd), dtype),
+        "v": jnp.zeros((batch, C, KV, hd), dtype),
+        "kpos": jnp.full((C,), -1, jnp.int32),
+    }
+
+
+def cache_insert(cache: dict, k1, v1, pos) -> dict:
+    """Insert a single-token k/v at absolute position ``pos`` (ring)."""
+    C = cache["k"].shape[1]
+    slot = pos % C
+    k = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["kpos"], pos[None].astype(jnp.int32), (slot,))
+    return {"k": k, "v": v, "kpos": kpos}
+
+
+def cache_prefill(cache: dict, k, v, positions) -> dict:
+    """Write a full prefill's k/v into the cache (keeps the last C tokens)."""
+    C = cache["k"].shape[1]
+    S = k.shape[1]
+    if S >= C:
+        ks, vs, ps = k[:, -C:], v[:, -C:], positions[-C:]
+        slots = ps % C
+        knew = cache["k"].at[:, slots].set(ks)
+        vnew = cache["v"].at[:, slots].set(vs)
+        pnew = cache["kpos"].at[slots].set(ps.astype(jnp.int32))
+    else:
+        slots = positions % C
+        knew = cache["k"].at[:, slots].set(k)
+        vnew = cache["v"].at[:, slots].set(v)
+        pnew = cache["kpos"].at[slots].set(positions.astype(jnp.int32))
+    return {"k": knew, "v": vnew, "kpos": pnew}
+
+
+def decode_attend(q1, cache: dict, pos, *, window=0, softcap=0.0):
+    """q1 (B, 1, J, G, hd) against the cache; returns (B, 1, H, hd)-flat."""
+    B, _, J, G, hd = q1.shape
+    scale = 1.0 / math.sqrt(hd)
+    kpos = cache["kpos"]
+    mask = (kpos >= 0) & (kpos <= pos)
+    if window:
+        mask &= kpos > pos - window
+    s = jnp.einsum("bqjgh,bkjh->bjgqk", q1, cache["k"]).astype(jnp.float32) * scale
+    s = _softcap(s, softcap)
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bjgqk,bkjh->bqjgh", p.astype(cache["v"].dtype), cache["v"])
+    return o.reshape(B, 1, J * G, hd)

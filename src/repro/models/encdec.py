@@ -1,0 +1,209 @@
+"""Encoder-decoder transformer (whisper-tiny backbone, arXiv:2212.04356).
+
+The mel-spectrogram + conv2 frontend is a STUB per the assignment carve-out:
+``input_specs`` supplies precomputed frame embeddings (B, Se, D).  The
+encoder is bidirectional; the decoder is causal with cross-attention whose
+k/v are computed once at prefill and cached.  Whisper uses layernorm +
+GELU + absolute positions (we use the sinusoidal table for both stacks —
+the learned 448-token table does not extend to the artificial 32k/500k
+decode shapes; noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import layers
+
+
+def _init_xattn(key, cfg, dtype):
+    return attn.init_attention(key, cfg, dtype)
+
+
+def init_encoder_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": layers.init_norm(cfg, dtype),
+            "attn": attn.init_attention(ks[0], cfg, dtype),
+            "ln2": layers.init_norm(cfg, dtype),
+            "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def init_decoder_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": layers.init_norm(cfg, dtype),
+            "self": attn.init_attention(ks[0], cfg, dtype),
+            "ln_x": layers.init_norm(cfg, dtype),
+            "cross": _init_xattn(ks[1], cfg, dtype),
+            "ln2": layers.init_norm(cfg, dtype),
+            "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def init_params(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kE, kD, ke, kf1, kf2 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(kE, cfg.encoder_layers)
+    dec_keys = jax.random.split(kD, cfg.num_layers)
+    return {
+        "embed": layers.init_embed(ke, cfg.vocab_size, cfg.d_model, dtype,
+                                   cfg.tie_embeddings),
+        "enc": jax.vmap(lambda k: init_encoder_layer(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: init_decoder_layer(k, cfg, dtype))(dec_keys),
+        "enc_norm": layers.init_norm(cfg, dtype),
+        "final_norm": layers.init_norm(cfg, dtype),
+    }
+
+
+def _attend(p, cfg, x, kv_x, *, causal, window=0):
+    q = attn.project_q(p, x, cfg)
+    k, v = attn.project_kv(p, kv_x)
+    Sq, Sk = x.shape[1], kv_x.shape[1]
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    if causal and window and Sq > window:
+        o = attn.attend_sliding_block(q, k, v, q_pos, window=window)
+    else:
+        o = attn.attend_full(q, k, v, q_pos, k_pos, causal=causal,
+                             window=window, q_chunk=cfg.q_chunk)
+    return attn.out_proj(p, o, cfg)
+
+
+def encode(params, cfg, frames):
+    """frames: (B, Se, D) stub embeddings -> (B, Se, D) encoder states."""
+    x = frames + layers.sinusoidal_positions(frames.shape[1], cfg.d_model
+                                             ).astype(frames.dtype)[None]
+
+    def layer_fn(xc, lp):
+        h = layers.apply_norm(lp["ln1"], xc)
+        xc = xc + _attend(lp["attn"], cfg, h, h, causal=False)
+        h = layers.apply_norm(lp["ln2"], xc)
+        xc = xc + layers.apply_mlp(lp["mlp"], h, "gelu")
+        return xc, None
+
+    if cfg.unroll:
+        nl = jax.tree.leaves(params["enc"])[0].shape[0]
+        for u in range(nl):
+            x, _ = layer_fn(x, jax.tree.map(lambda t: t[u], params["enc"]))
+    else:
+        x, _ = jax.lax.scan(layer_fn, x, params["enc"])
+    return layers.apply_norm(params["enc_norm"], x)
+
+
+def _decoder_stack(params, cfg, x, enc_out, mode, cache, pos):
+    """mode: 'train'|'prefill'|'decode'. cache: stacked per-layer dicts."""
+    def layer_fn(carry, xs):
+        xc = carry
+        lp, lc = xs
+        new_c = {}
+        h = layers.apply_norm(lp["ln1"], xc)
+        if mode == "decode":
+            q = attn.project_q(lp["self"], h, cfg)
+            k1, v1 = attn.project_kv(lp["self"], h)
+            cnew = attn.cache_insert(lc["self"], k1, v1, pos)
+            o = attn.decode_attend(q, cnew, pos, window=cfg.window)
+            xc = xc + attn.out_proj(lp["self"], o, cfg)
+            new_c["self"] = cnew
+            # cross-attention against cached encoder k/v
+            hq = layers.apply_norm(lp["ln_x"], xc)
+            qx = attn.project_q(lp["cross"], hq, cfg)
+            kp = lc["cross_kpos"]
+            ox = attn.decode_attend(
+                qx, {"k": lc["cross_k"], "v": lc["cross_v"], "kpos": kp},
+                jnp.int32(2 ** 30))
+            xc = xc + attn.out_proj(lp["cross"], ox, cfg)
+            new_c.update(cross_k=lc["cross_k"], cross_v=lc["cross_v"],
+                         cross_kpos=kp)
+        else:
+            xc = xc + _attend(lp["self"], cfg, h, h, causal=True,
+                              window=cfg.window)
+            hq = layers.apply_norm(lp["ln_x"], xc)
+            xc = xc + _attend(lp["cross"], cfg, hq, enc_out, causal=False)
+            if mode == "prefill":
+                S = h.shape[1]
+                k, v = attn.project_kv(lp["self"], h)
+                new_c["self"] = attn.cache_prefill(lc["self"], k, v,
+                                                   jnp.arange(S))
+                kx, vx = attn.project_kv(lp["cross"], enc_out)
+                new_c.update(cross_k=kx, cross_v=vx,
+                             cross_kpos=jnp.arange(enc_out.shape[1], dtype=jnp.int32))
+        h = layers.apply_norm(lp["ln2"], xc)
+        xc = xc + layers.apply_mlp(lp["mlp"], h, "gelu")
+        if not new_c:
+            new_c = lc
+        return xc, new_c
+
+    if cfg.unroll:
+        nl = jax.tree.leaves(params["dec"])[0].shape[0]
+        outs = []
+        for u in range(nl):
+            lp = jax.tree.map(lambda t: t[u], params["dec"])
+            lc = (jax.tree.map(lambda t: t[u], cache) if cache is not None
+                  else {"self": None})
+            x, yc = layer_fn(x, (lp, lc))
+            outs.append(yc)
+        if cache is None:
+            return x, None
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    if cache is None:
+        xout, _ = jax.lax.scan(lambda c, lp: layer_fn(c, (lp, {"self": None})),
+                               x, params["dec"])
+        return xout, None
+    xout, new_cache = jax.lax.scan(layer_fn, x, (params["dec"], cache))
+    return xout, new_cache
+
+
+def forward(params, cfg, tokens, frames, *, mode="train", cache=None, pos=None):
+    """tokens: (B, S); frames: (B, Se, D) or None when decoding from cache."""
+    x = layers.embed_tokens(params["embed"], tokens)
+    if mode == "decode":
+        # absolute sinusoidal position for `pos`
+        posv = jnp.asarray(pos, jnp.float32)
+        half = cfg.d_model // 2
+        import math as _m
+        freq = jnp.exp(-_m.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                       / max(1, half - 1))
+        ang = posv * freq
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        x = x + pe.astype(x.dtype)
+        enc_out = None
+    else:
+        x = x + layers.sinusoidal_positions(tokens.shape[1], cfg.d_model
+                                            ).astype(x.dtype)[None]
+        enc_out = encode(params, cfg, frames)
+    x, new_cache = _decoder_stack(params, cfg, x, enc_out, mode, cache, pos)
+    x = layers.apply_norm(params["final_norm"], x)
+    logits = layers.unembed(params["embed"], x)
+    return logits, jnp.zeros((), jnp.float32), new_cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    nl, Se = cfg.num_layers, cfg.encoder_seq
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    def one():
+        return {"self": attn.init_cache(cfg, batch, max_len, dtype),
+                "cross_k": jnp.zeros((batch, Se, KV, hd), dtype),
+                "cross_v": jnp.zeros((batch, Se, KV, hd), dtype),
+                "cross_kpos": jnp.arange(Se, dtype=jnp.int32)}
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(nl)])
+
+
+def train_loss(params, cfg, batch, aux_weight: float = 0.0):
+    tokens, frames = batch["tokens"], batch["frames"]
+    logits, _, _ = forward(params, cfg, tokens, frames, mode="train")
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def prefill(params, cfg, tokens, frames, cache):
+    logits, _, cache = forward(params, cfg, tokens, frames, mode="prefill",
+                               cache=cache)
+    return logits[:, -1:], cache
+
+
+def decode_step(params, cfg, token, cache, pos):
+    logits, _, cache = forward(params, cfg, token, None, mode="decode",
+                               cache=cache, pos=pos)
+    return logits, cache

@@ -1,0 +1,125 @@
+"""Shared layer primitives: norms, MLPs, embeddings, RoPE.
+
+Everything is functional: ``init_*`` builds a params dict, ``apply``-style
+functions are pure.  Param leaf names are load-bearing — the sharding rules
+in :mod:`repro.dist.sharding` match on them.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, dtype) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf ** 2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": _dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+         "wo": _dense_init(ks[1], (d_ff, d_model), d_ff, dtype)}
+    if act in ("swiglu", "geglu"):
+        p["wg"] = _dense_init(ks[2], (d_model, d_ff), d_model, dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.gelu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":  # squared ReLU (nemotron-4)
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"embedding": _dense_init(ks[0], (vocab, d_model), d_model, dtype)}
+    if not tie:
+        p["unembed"] = _dense_init(ks[1], (d_model, vocab), d_model, dtype)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    if "unembed" in p:
+        return jnp.einsum("...d,dv->...v", x, p["unembed"])
+    return jnp.einsum("...d,vd->...v", x, p["embedding"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions: (..., S) int -> cos, sin of shape (..., S, head_dim // 2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # add head axis
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    half = d_model // 2
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
+    ang = pos * freq[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

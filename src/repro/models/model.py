@@ -1,0 +1,99 @@
+"""Unified model API: ``build(cfg)`` returns pure functions shared by the
+trainer, the server, the smoke tests and the dry-run lowering.
+
+``input_template`` produces jax.ShapeDtypeStruct stand-ins for every model
+input of a given (config x input-shape) pair — the dry-run lowers against
+these without allocating anything.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+
+
+class Model(NamedTuple):
+    cfg: Any
+    init: Callable            # (key) -> params
+    train_loss: Callable      # (params, batch) -> scalar
+    prefill: Callable         # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable     # (params, token, cache, pos) -> (logits, cache)
+    init_cache: Callable      # (batch, max_len, dtype) -> cache
+
+
+def build(cfg) -> Model:
+    if cfg.arch_type == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key, dtype=None: encdec.init_params(key, cfg, dtype),
+            train_loss=lambda p, b: encdec.train_loss(p, cfg, b),
+            prefill=lambda p, b, c: encdec.prefill(p, cfg, b["tokens"],
+                                                   b["frames"], c),
+            decode_step=lambda p, t, c, pos: encdec.decode_step(p, cfg, t, c, pos),
+            init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+                encdec.init_cache(cfg, batch, max_len, dtype),
+        )
+
+    def _prefill(p, b, c):
+        return transformer.prefill(p, cfg, b["tokens"], c,
+                                   prefix_embeds=b.get("prefix_embeds"),
+                                   last_only=cfg.prefill_last_only)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=None: transformer.init_params(key, cfg, dtype),
+        train_loss=lambda p, b: transformer.train_loss(p, cfg, b),
+        prefill=_prefill,
+        decode_step=lambda p, t, c, pos: transformer.decode_step(p, cfg, t, c, pos),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            transformer.init_cache(cfg, batch, max_len, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_template(cfg, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
+    """Per-node training batch.  For vlm/audio, part of the sequence budget
+    is the stub frontend embedding."""
+    if cfg.arch_type == "vlm":
+        P = cfg.frontend_tokens
+        return {"tokens": _sds((batch, seq - P), jnp.int32),
+                "prefix_embeds": _sds((batch, P, cfg.d_model), dtype)}
+    if cfg.arch_type == "audio":
+        return {"tokens": _sds((batch, seq), jnp.int32),
+                "frames": _sds((batch, cfg.encoder_seq, cfg.d_model), dtype)}
+    return {"tokens": _sds((batch, seq), jnp.int32)}
+
+
+def decode_templates(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """(token, cache, pos) templates for serve_step with a seq-long context."""
+    token = _sds((batch, 1), jnp.int32)
+    model = build(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(batch, seq, dtype))
+    pos = _sds((), jnp.int32)
+    return token, cache, pos
+
+
+def materialize_batch(cfg, batch: int, seq: int, key, dtype=jnp.bfloat16) -> dict:
+    """A real (random) training batch matching ``train_batch_template``."""
+    tmpl = train_batch_template(cfg, batch, seq, dtype)
+    out = {}
+    for name, spec in tmpl.items():
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, spec.shape, 0,
+                                           cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, spec.dtype) * 0.02
+    return out

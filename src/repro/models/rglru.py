@@ -1,0 +1,71 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal mixing block: dual linear branches (recurrent branch with causal
+conv + RG-LRU gated diagonal recurrence; gate branch with GeLU), merged
+multiplicatively and projected back to d_model.  Shares
+:func:`repro.models.ssm.chunked_linear_scan` with mamba — both are diagonal
+linear recurrences, which is why one Pallas kernel serves both.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .ssm import causal_conv1d, chunked_linear_scan
+
+_C_EXP = 8.0  # Griffin's fixed exponent scale
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    D, R = cfg.d_model, cfg.lru_width
+    w = cfg.conv_width
+    ks = jax.random.split(key, 7)
+    # Lambda init: a = sigmoid(lam) in [0.9, 0.999] per Griffin
+    u = jax.random.uniform(ks[5], (R,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "wx": layers._dense_init(ks[0], (D, R), D, dtype),       # recurrent branch
+        "wy": layers._dense_init(ks[1], (D, R), D, dtype),       # gate branch
+        "conv_w": layers._dense_init(ks[2], (w, R), w, dtype),
+        "conv_b": jnp.zeros((R,), dtype),
+        "w_rgate": layers._dense_init(ks[3], (R, R), R, dtype),  # recurrence gate
+        "w_igate": layers._dense_init(ks[4], (R, R), R, dtype),  # input gate
+        "b_rgate": jnp.zeros((R,), dtype),
+        "b_igate": jnp.zeros((R,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "wo": layers._dense_init(ks[6], (R, D), R, dtype),
+    }
+
+
+def rglru_forward(p, x, cfg, *, state=None, chunk: int = 64):
+    """x: (B, S, D) -> (y, new_state); state = {'conv': (B,w-1,R), 'h': (B,R)}."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p["wx"])
+    yb = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wy"]))
+    conv_state = state["conv"] if state else None
+    xc, new_conv = causal_conv1d(xb, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xc, p["w_rgate"])
+                       + p["b_rgate"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xc, p["w_igate"])
+                       + p["b_igate"]).astype(jnp.float32)
+    log_a_base = -jax.nn.softplus(-p["lam"])          # log sigmoid(lam) <= 0
+    log_a = _C_EXP * r * log_a_base[None, None, :]
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    h0 = state["h"] if state else None
+    h_all, h_last = chunked_linear_scan(a, b, h0, chunk=chunk,
+                                        use_pallas=cfg.use_pallas)
+    y = (h_all.astype(x.dtype) * yb)
+    out = jnp.einsum("bsr,rd->bsd", y, p["wo"])
+    return out, {"conv": new_conv, "h": h_last}
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

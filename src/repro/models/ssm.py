@@ -1,0 +1,159 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b family, arXiv:2312.00752 /
+2410.05355).
+
+The sequence mixer is the diagonal linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` with input-dependent (selective) a, b.  The
+recurrence is evaluated with :func:`chunked_linear_scan` — sequential over
+chunks, parallel (associative scan) inside a chunk — which bounds the
+materialized state tensor to (B, chunk, d_inner, N) and mirrors exactly what
+the Pallas ``linear_recurrence`` kernel does in VMEM on TPU.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+# ---------------------------------------------------------------------------
+# Chunked diagonal linear recurrence (shared by mamba and RG-LRU)
+# ---------------------------------------------------------------------------
+
+def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None,
+                        chunk: int = 64, use_pallas: bool = False):
+    """h_t = a_t * h_{t-1} + b_t along axis 1.
+
+    a, b: (B, S, ...); h0: (B, ...) initial state (zeros if None).
+    Returns (h_all (B, S, ...), h_last (B, ...)).
+
+    use_pallas routes through the linear_recurrence kernel (interpret mode
+    on CPU); non-zero h0 is folded into b_0 (b_0 += a_0 * h0).
+    """
+    B, S = a.shape[:2]
+    rest = a.shape[2:]
+    if h0 is None:
+        h0 = jnp.zeros((B,) + rest, a.dtype)
+    if use_pallas and S > 1:
+        from ..kernels.linear_recurrence import linear_recurrence as _lr
+        C = 1
+        for r in rest:
+            C *= r
+        af = a.reshape(B, S, C).astype(jnp.float32)
+        bf = b.reshape(B, S, C).astype(jnp.float32)
+        bf = bf.at[:, 0].add(af[:, 0] * h0.reshape(B, C).astype(jnp.float32))
+        bt = min(128, S)
+        if S % bt == 0 and C % min(512, C) == 0:
+            h_all, h_last = _lr(af, bf, block_t=bt, block_c=min(512, C),
+                                interpret=True)
+            return (h_all.reshape((B, S) + rest),
+                    h_last.reshape((B,) + rest))
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * len(rest),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * len(rest))
+    nc = a.shape[1] // c
+    a_ = a.reshape((B, nc, c) + rest).swapaxes(0, 1)  # (nc, B, c, ...)
+    b_ = b.reshape((B, nc, c) + rest).swapaxes(0, 1)
+
+    def combine(x, y):
+        (a1, b1), (a2, b2) = x, y
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, ab):
+        ac, bc = ab
+        # within-chunk prefix: cumulative (A, Bc) pairs
+        A, Bc = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = A * h[:, None] + Bc                     # (B, c, ...)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(step, h0, (a_, b_))
+    h_all = h_chunks.swapaxes(0, 1).reshape((B, nc * c) + rest)
+    return h_all[:, :S], h_last
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None):
+    """Depthwise causal conv.  x: (B, S, C); w: (width, C); state: (B, width-1, C)
+    holds trailing inputs from the previous segment.  Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else state
+    return y + b, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype) -> dict:
+    D, di, N, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    w = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (di, 1))
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.clip(jnp.exp(jax.random.uniform(ks[5], (di,))
+                         * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)),
+                 1e-4)))
+    return {
+        "in_proj": layers._dense_init(ks[0], (D, 2 * di), D, dtype),
+        "conv_w": layers._dense_init(ks[1], (w, di), w, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers._dense_init(ks[2], (di, dr + 2 * N), di, dtype),
+        "dt_proj": layers._dense_init(ks[3], (dr, di), dr, dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(A).astype(jnp.float32),
+        "Dskip": jnp.ones((di,), dtype),
+        "out_proj": layers._dense_init(ks[4], (di, D), di, dtype),
+    }
+
+
+def _selective_terms(p, xc, cfg):
+    """From post-conv activations xc (B, S, di) build recurrence terms."""
+    N, dr = cfg.ssm_state, cfg.dt_rank
+    dbc = jnp.einsum("bsd,dk->bsk", xc, p["x_proj"])
+    dt_low, Bmat, Cmat = jnp.split(dbc, [dr, dr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low, p["dt_proj"])
+        + p["dt_bias"].astype(jnp.float32))                     # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                     # (di, N)
+    a = jnp.exp(dt[..., None] * A)                               # (B,S,di,N)
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bmat[:, :, None, :].astype(jnp.float32)
+    return a, b, Cmat
+
+
+def mamba_forward(p, x, cfg, *, state=None, chunk: int = 64):
+    """x: (B, S, D) -> (y (B, S, D), new_state).  ``state`` is the serve-time
+    cache {'conv': (B, w-1, di), 'h': (B, di, N)} or None for training."""
+    B, S, D = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state else None
+    xc, new_conv = causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    a, b, Cmat = _selective_terms(p, xc, cfg)
+    h0 = state["h"] if state else None
+    h_all, h_last = chunked_linear_scan(a, b, h0, chunk=chunk,
+                                        use_pallas=cfg.use_pallas)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all,
+                   Cmat.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["Dskip"] * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    new_state = {"conv": new_conv, "h": h_last}
+    return out, new_state
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,316 @@
+"""Decoder-only transformer assembly for all decoder-style arch families
+(dense / moe / ssm / hybrid / vlm-backbone).
+
+Layers are grouped into *pattern units* (cfg.pattern, e.g. ("rglru",
+"rglru", "attn") for recurrentgemma); the forward pass is a ``lax.scan``
+over stacked unit params so the HLO stays O(pattern) instead of O(layers).
+Remainder layers (num_layers % len(pattern)) form a second, shorter stack.
+
+Three entry points:
+  * ``forward``       — full-sequence training/prefill forward to logits
+  * ``prefill``       — forward + populate a serve cache
+  * ``decode_step``   — one token against the cache (serve_step)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import layers, moe, rglru, ssm
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_one_layer(key, cfg, kind, dtype):
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        return {"ln1": layers.init_norm(cfg, dtype),
+                "attn": attn.init_attention(ks[0], cfg, dtype),
+                "ln2": layers.init_norm(cfg, dtype),
+                "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)}
+    if kind == "moe":
+        return {"ln1": layers.init_norm(cfg, dtype),
+                "attn": attn.init_attention(ks[0], cfg, dtype),
+                "ln2": layers.init_norm(cfg, dtype),
+                "moe": moe.init_moe(ks[1], cfg, dtype)}
+    if kind == "mamba":
+        return {"ln1": layers.init_norm(cfg, dtype),
+                "mamba": ssm.init_mamba(ks[0], cfg, dtype)}
+    if kind == "rglru":
+        return {"ln1": layers.init_norm(cfg, dtype),
+                "rec": rglru.init_rglru(ks[0], cfg, dtype),
+                "ln2": layers.init_norm(cfg, dtype),
+                "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)}
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def _init_unit(key, cfg, pattern, dtype):
+    ks = jax.random.split(key, len(pattern))
+    return {f"{i}_{kind}": _init_one_layer(ks[i], cfg, kind, dtype)
+            for i, kind in enumerate(pattern)}
+
+
+def _apply_attn_layer(p, x, cfg, rope, mode, cache, pos):
+    """mode: 'train' (no cache), 'prefill', 'decode'."""
+    h = layers.apply_norm(p["ln1"], x)
+    q = attn.project_q(p["attn"], h, cfg)
+    if mode == "decode":
+        cos, sin = rope
+        k1, v1 = attn.project_kv(p["attn"], h)
+        k1 = layers.apply_rope(k1, cos, sin)
+        qf = q.reshape(q.shape[:2] + (cfg.num_heads, cfg.head_dim))
+        qf = layers.apply_rope(qf, cos, sin)
+        q = qf.reshape(q.shape)
+        cache_new = attn.cache_insert(cache, k1, v1, pos)
+        if cfg.use_pallas:
+            from ..kernels.decode_attention import decode_attention as _dk
+            o = _dk(q, cache_new["k"], cache_new["v"], cache_new["kpos"],
+                    pos, window=cfg.window, interpret=True)
+        else:
+            o = attn.decode_attend(q, cache_new, pos, window=cfg.window,
+                                   softcap=cfg.logit_softcap)
+    else:
+        k, v = attn.project_kv(p["attn"], h)
+        cos, sin = rope
+        B, S = h.shape[:2]
+        qf = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+        qf = layers.apply_rope(qf, cos, sin)
+        q = qf.reshape(B, S, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads,
+                       cfg.head_dim)
+        k = layers.apply_rope(k, cos, sin)
+        q_pos = jnp.arange(S)
+        if cfg.use_pallas:
+            from ..kernels.flash_attention import flash_attention as _fl
+            of = _fl(qf, k, v, causal=True, window=cfg.window,
+                     block_q=min(128, S), block_k=min(128, S),
+                     interpret=True)
+            o = of  # (B, S, H, hd) == flat layout expected below
+        elif cfg.window and S > cfg.window:
+            o = attn.attend_sliding_block(q, k, v, q_pos, window=cfg.window,
+                                          softcap=cfg.logit_softcap)
+        else:
+            o = attn.attend_full(q, k, v, q_pos, q_pos, causal=True,
+                                 window=cfg.window, softcap=cfg.logit_softcap,
+                                 q_chunk=cfg.q_chunk)
+        if mode == "prefill":
+            cache_new = attn.cache_prefill(cache, k, v, q_pos)
+        else:
+            cache_new = cache
+    x = x + attn.out_proj(p["attn"], o, cfg)
+    return x, cache_new
+
+
+def _apply_layer(p, x, cfg, kind, rope, mode, cache, pos):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "moe"):
+        x, cache = _apply_attn_layer(p, x, cfg, rope, mode, cache, pos)
+        h = layers.apply_norm(p["ln2"], x)
+        if kind == "attn":
+            x = x + layers.apply_mlp(p["mlp"], h, cfg.mlp_act)
+        else:
+            y, aux = moe.apply_moe(p["moe"], h, cfg)
+            x = x + y
+        return x, cache, aux
+    if kind == "mamba":
+        h = layers.apply_norm(p["ln1"], x)
+        y, new_state = ssm.mamba_forward(
+            p["mamba"], h, cfg, state=cache if mode != "train" else None,
+            chunk=cfg.scan_chunk)
+        return x + y, (new_state if mode != "train" else cache), aux
+    if kind == "rglru":
+        h = layers.apply_norm(p["ln1"], x)
+        y, new_state = rglru.rglru_forward(
+            p["rec"], h, cfg, state=cache if mode != "train" else None,
+            chunk=cfg.scan_chunk)
+        x = x + y
+        h = layers.apply_norm(p["ln2"], x)
+        x = x + layers.apply_mlp(p["mlp"], h, cfg.mlp_act)
+        return x, (new_state if mode != "train" else cache), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Cache structure
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg, kind, batch, max_len, dtype):
+    if kind in ("attn", "moe"):
+        return attn.init_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return ssm.init_mamba_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    units, rem = cfg.units_and_rem
+    def unit_cache():
+        return {f"{i}_{kind}": _init_layer_cache(cfg, kind, batch, max_len, dtype)
+                for i, kind in enumerate(cfg.pattern)}
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[unit_cache() for _ in range(units)]) if units else {}
+    remc = {f"{i}_{kind}": _init_layer_cache(cfg, kind, batch, max_len, dtype)
+            for i, kind in enumerate(cfg.pattern[:rem])}
+    return {"units": stacked, "rem": remc}
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    units, rem = cfg.units_and_rem
+    k_embed, k_units, k_rem, k_final = jax.random.split(key, 4)
+    params = {"embed": layers.init_embed(k_embed, cfg.vocab_size, cfg.d_model,
+                                         dtype, cfg.tie_embeddings),
+              "final_norm": layers.init_norm(cfg, dtype)}
+    if units:
+        unit_keys = jax.random.split(k_units, units)
+        params["units"] = jax.vmap(
+            lambda k: _init_unit(k, cfg, cfg.pattern, dtype))(unit_keys)
+    if rem:
+        params["rem"] = _init_unit(k_rem, cfg, cfg.pattern[:rem], dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _rope_for(cfg, positions):
+    if not cfg.num_heads:
+        return (None, None)
+    return layers.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _run_stack(params_stacked, x, cfg, pattern, rope, mode, caches, pos):
+    """scan over stacked units; caches go in as xs and come out as ys.
+    cfg.unroll replaces the scan with a Python loop (cost-probe mode)."""
+    def unit_fn(carry, xs):
+        xc, aux = carry
+        up, uc = xs
+        new_uc = {}
+        for i, kind in enumerate(pattern):
+            name = f"{i}_{kind}"
+            c = uc[name] if uc else None
+            xc, cnew, a = _apply_layer(up[name], xc, cfg, kind, rope, mode, c, pos)
+            new_uc[name] = cnew if cnew is not None else jnp.zeros((), jnp.float32)
+            aux = aux + a
+        return (xc, aux), new_uc
+
+    if cfg.unroll:
+        n_units = jax.tree.leaves(params_stacked)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        outs = []
+        for u in range(n_units):
+            up = jax.tree.map(lambda t: t[u], params_stacked)
+            uc = (jax.tree.map(lambda t: t[u], caches)
+                  if caches is not None else None)
+            carry, yc = unit_fn(carry, (up, uc))
+            outs.append(yc)
+        x, aux = carry
+        if caches is None:
+            return x, aux, None
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, aux, new_caches
+    if caches is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, up: unit_fn(c, (up, None)), (x, jnp.zeros((), jnp.float32)),
+            params_stacked)
+        return x, aux, None
+    (x, aux), new_caches = jax.lax.scan(
+        unit_fn, (x, jnp.zeros((), jnp.float32)), (params_stacked, caches))
+    return x, aux, new_caches
+
+
+def forward(params, cfg, tokens, *, prefix_embeds=None, mode="train",
+            cache=None, pos=None, last_only=False):
+    """tokens: (B, S) int32.  prefix_embeds: (B, P, D) early-fusion embeddings
+    (VLM patches / audio frames) prepended to the token embeddings.
+
+    Returns (logits (B, S_total, V), aux, new_cache).
+    """
+    x = layers.embed_tokens(params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, D = x.shape
+    if mode == "decode":
+        positions = jnp.full((1,), pos)
+    else:
+        positions = jnp.arange(S)
+    rope = _rope_for(cfg, positions)
+
+    units, rem = cfg.units_and_rem
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"units": {}, "rem": {}}
+    if units:
+        ucache = cache["units"] if cache is not None else None
+        x, aux, uc = _run_stack(params["units"], x, cfg, cfg.pattern, rope,
+                                mode, ucache, pos)
+        aux_total += aux
+        if uc is not None:
+            new_cache["units"] = uc
+    if rem:
+        rpattern = cfg.pattern[:rem]
+        rcache = cache["rem"] if cache is not None else None
+        for i, kind in enumerate(rpattern):
+            name = f"{i}_{kind}"
+            c = rcache[name] if rcache is not None else None
+            x, cnew, a = _apply_layer(params["rem"][name], x, cfg, kind, rope,
+                                      mode, c, pos)
+            aux_total += a
+            if cache is not None:
+                new_cache["rem"][name] = cnew
+    if last_only:  # prefill only needs the last position's logits
+        x = x[:, -1:]
+    x = layers.apply_norm(params["final_norm"], x)
+    logits = layers.unembed(params["embed"], x)
+    return logits, aux_total, (new_cache if cache is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# Losses and serve steps
+# ---------------------------------------------------------------------------
+
+def train_loss(params, cfg, batch, aux_weight: float = 0.01):
+    """batch: {'tokens': (B, S), optional 'prefix_embeds': (B, P, D)}.
+    Next-token CE over token positions (prefix positions excluded)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    logits, aux, _ = forward(params, cfg, tokens, prefix_embeds=prefix,
+                             mode="train")
+    P = 0 if prefix is None else prefix.shape[1]
+    logits_t = logits[:, P:, :]               # text positions
+    lp = jax.nn.log_softmax(logits_t[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = nll.mean() + aux_weight * aux
+    return loss
+
+
+def prefill(params, cfg, tokens, cache, *, prefix_embeds=None,
+            last_only=False):
+    logits, _, cache = forward(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                               mode="prefill", cache=cache, last_only=last_only)
+    return logits[:, -1:], cache
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar int32 absolute position."""
+    logits, _, cache = forward(params, cfg, token, mode="decode", cache=cache,
+                               pos=pos)
+    return logits, cache

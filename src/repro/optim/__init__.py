@@ -1,0 +1,1 @@
+from .optimizers import Optimizer, adam, momentum, sgd  # noqa: F401

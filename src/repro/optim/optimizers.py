@@ -1,0 +1,48 @@
+"""Minimal optimizer transforms (optax-style init/update pairs) used as the
+*local* update rule inside the decentralized algorithms.  The paper's
+MC-DSGT uses plain gamma * h; momentum/adam are framework extensions."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any], tuple]  # (grads, state) -> (updates, state)
+
+
+def sgd() -> Optimizer:
+    return Optimizer(lambda p: None, lambda g, s: (g, s))
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, m):
+        m = jax.tree.map(lambda mm, g: beta * mm + g, m, grads)
+        return m, m
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, s):
+        t = s["t"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, s["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, s["v"], grads)
+        mh = jax.tree.map(lambda mm: mm / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2 ** t), v)
+        upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + eps), mh, vh)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,104 @@
+"""Unit + property tests for gossip weight matrices (Assumption 3, Thm 3, eq. 21)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import gossip, topology as topo
+
+
+@pytest.mark.parametrize("n,beta", [(8, 0.5), (16, 0.75), (16, 1 - 1 / 16),
+                                    (32, 0.9), (12, 0.25), (8, 0.0)])
+def test_theorem3_matrices_assumption3(n, beta):
+    sched = gossip.theorem3_weight_schedule(n, beta)
+    graphs = topo.sun_shaped_schedule(n, beta)
+    for t in range(sched.period):
+        gossip.check_assumption3(sched(t), graphs(t), beta)
+
+
+@pytest.mark.parametrize("n,beta", [(16, 0.5), (16, 0.9), (32, 0.75)])
+def test_theorem3_beta_is_tight(n, beta):
+    """Theorem 3 proof: ||W - 11^T/n||_2 is exactly beta for the construction."""
+    sched = gossip.theorem3_weight_schedule(n, beta)
+    for t in range(sched.period):
+        assert abs(gossip.mixing_beta(sched(t)) - beta) < 1e-9
+
+
+def test_contraction_eq21():
+    """||prod W^t - 11^T/n||_2 <= beta^rounds (eq. 21)."""
+    n, beta = 16, 0.75
+    sched = gossip.theorem3_weight_schedule(n, beta)
+    for rounds in [1, 2, 4, 8]:
+        c = gossip.consensus_contraction(sched, rounds)
+        assert c <= beta ** rounds + 1e-9, (rounds, c, beta ** rounds)
+
+
+def test_laplacian_rule_common_topologies():
+    """Remark 5: Laplacian-rule matrices of common graphs satisfy Assumption 3
+    with beta <= 1 - 1/n for large enough n."""
+    for n, make in [(16, topo.ring_graph), (16, topo.complete_graph),
+                    (16, topo.static_exponential_graph),
+                    (16, lambda n: topo.star_graph(n, 0))]:
+        adj = make(n)
+        W = gossip.laplacian_rule(adj)
+        gossip.check_assumption3(W, adj)
+
+
+def test_metropolis_weights():
+    adj = topo.erdos_renyi_graph(12, 0.4, seed=3)
+    W = gossip.metropolis_weights(adj)
+    gossip.check_assumption3(W, adj)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 24), seed=st.integers(0, 100),
+       rounds=st.integers(1, 6))
+def test_property_contraction_any_schedule(n, seed, rounds):
+    """Property: for any ER-graph schedule, the multi-consensus product
+    contracts at least as fast as max-beta^rounds (eq. 21)."""
+    rng = np.random.default_rng(seed)
+    mats = []
+    for t in range(rounds):
+        adj = topo.erdos_renyi_graph(n, 0.5, seed=int(rng.integers(1e6)))
+        mats.append(gossip.laplacian_rule(adj))
+    sched = gossip.WeightSchedule(tuple(mats))
+    beta = sched.beta
+    c = gossip.consensus_contraction(sched, rounds)
+    assert c <= beta ** rounds + 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 32), beta_frac=st.floats(0.0, 1.0))
+def test_property_theorem3_any_beta(n, beta_frac):
+    """Property: the Theorem 3 construction is valid for any beta in
+    [0, 1-1/n]."""
+    beta = beta_frac * (1 - 1 / n)
+    sched = gossip.theorem3_weight_schedule(n, beta)
+    for t in range(sched.period):
+        W = sched(t)
+        gossip.check_assumption3(W, beta=beta + 1e-9)
+
+
+def test_multi_consensus_matches_matrix_product():
+    n = 8
+    sched = gossip.theorem3_weight_schedule(n, 0.6)
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=(n, 5))
+    out = gossip.multi_consensus(z, sched, 2, 7)
+    P = np.eye(n)
+    for t in range(2, 7):
+        P = sched(t) @ P
+    assert np.allclose(out, P @ z, atol=1e-12)
+
+
+def test_mean_preservation():
+    """Double stochasticity => gossip preserves the node-mean exactly."""
+    n = 16
+    sched = gossip.theorem3_weight_schedule(n, 0.8)
+    rng = np.random.default_rng(1)
+    z = rng.normal(size=(n, 7))
+    out = gossip.multi_consensus(z, sched, 0, 11)
+    assert np.allclose(out.mean(0), z.mean(0), atol=1e-12)

@@ -1,0 +1,232 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gossip_matmul import gossip_mix
+from repro.kernels.linear_recurrence import linear_recurrence
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, Sq, Sk, H, KV, hd, causal, window, bq, bk)
+    (1, 128, 128, 4, 4, 64, True, 0, 64, 64),
+    (2, 256, 256, 4, 2, 64, True, 0, 128, 128),
+    (1, 128, 128, 8, 1, 32, True, 0, 64, 64),      # MQA
+    (1, 256, 256, 4, 4, 64, True, 64, 64, 64),     # sliding window
+    (2, 128, 128, 2, 2, 128, False, 0, 64, 64),    # bidirectional
+    (1, 512, 512, 2, 1, 64, True, 128, 128, 128),  # window > block
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Sq, Sk, H, KV, hd, causal, window, bq, bk = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = _rand(ks[0], (B, Sq, H, hd), dtype)
+    k = _rand(ks[1], (B, Sk, KV, hd), dtype)
+    v = _rand(ks[2], (B, Sk, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_blocks_irrelevant():
+    """Output must not depend on the block decomposition."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = _rand(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = _rand(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = _rand(ks[2], (1, 256, 2, 64), jnp.float32)
+    a = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, block_q=256, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear recurrence
+# ---------------------------------------------------------------------------
+
+LINREC_CASES = [
+    # (B, S, C, bt, bc)
+    (1, 128, 64, 32, 64),
+    (2, 256, 512, 128, 256),
+    (1, 64, 1024, 64, 512),
+    (3, 128, 32, 128, 32),
+]
+
+
+@pytest.mark.parametrize("case", LINREC_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_recurrence_matches_ref(case, dtype):
+    B, S, C, bt, bc = case
+    ks = jax.random.split(jax.random.key(2), 2)
+    # decay-like a in (0, 1): matches the mamba/rglru regime, keeps the
+    # recurrence stable over long horizons
+    a = jax.nn.sigmoid(_rand(ks[0], (B, S, C), jnp.float32)).astype(dtype)
+    b = _rand(ks[1], (B, S, C), dtype)
+    h_all, h_last = linear_recurrence(a, b, block_t=bt, block_c=bc,
+                                      interpret=True)
+    want_all, want_last = ref.linear_recurrence_ref(a, b)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(h_all), np.asarray(want_all),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(want_last),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s_chunks=st.integers(1, 4), c_chunks=st.integers(1, 3),
+       seed=st.integers(0, 50))
+def test_property_linrec_chunking_invariance(s_chunks, c_chunks, seed):
+    """Property: kernel output is independent of the chosen tiling."""
+    B, S, C = 1, 32 * s_chunks, 16 * c_chunks
+    ks = jax.random.split(jax.random.key(seed), 2)
+    a = jax.nn.sigmoid(_rand(ks[0], (B, S, C), jnp.float32))
+    b = _rand(ks[1], (B, S, C), jnp.float32)
+    out1, last1 = linear_recurrence(a, b, block_t=32, block_c=16, interpret=True)
+    want_all, want_last = ref.linear_recurrence_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(want_all), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(last1), np.asarray(want_last), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gossip matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,R,D,bd", [(8, 1, 256, 128), (16, 4, 1024, 512),
+                                      (32, 8, 512, 512), (64, 2, 2048, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix_matches_ref(n, R, D, bd, dtype):
+    from repro.core import gossip as G
+    sched = G.theorem3_weight_schedule(n, 1 - 1 / n)
+    ws = jnp.asarray(sched.stacked(0, R), jnp.float32)
+    x = _rand(jax.random.key(3), (n, D), dtype)
+    out = gossip_mix(ws, x, block_d=bd, interpret=True)
+    want = ref.gossip_mix_ref(ws, x)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_gossip_mix_preserves_mean():
+    """System invariant: doubly-stochastic mixing preserves the node mean."""
+    from repro.core import gossip as G
+    n, D = 16, 512
+    sched = G.theorem3_weight_schedule(n, 0.8)
+    ws = jnp.asarray(sched.stacked(0, 6), jnp.float32)
+    x = _rand(jax.random.key(4), (n, D), jnp.float32)
+    out = gossip_mix(ws, x, block_d=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(out.mean(0)), np.asarray(x.mean(0)),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (serve_step hot spot)
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    # (B, C, J, G, hd, window, filled, pos, bk)
+    (2, 256, 2, 2, 64, 0, 256, 255, 128),     # full cache
+    (1, 512, 1, 8, 64, 0, 300, 299, 128),     # partially filled (kpos = -1 tail)
+    (2, 256, 2, 4, 128, 128, 256, 400, 64),   # ring buffer, window
+    (1, 128, 4, 1, 32, 0, 128, 127, 128),     # MHA-ish
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(case, dtype):
+    from repro.kernels.decode_attention import decode_attention
+    B, C, J, G, hd, window, filled, pos, bk = case
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = _rand(ks[0], (B, 1, J, G, hd), dtype)
+    k = _rand(ks[1], (B, C, J, hd), dtype)
+    v = _rand(ks[2], (B, C, J, hd), dtype)
+    # kpos: ring semantics — absolute position of each slot, -1 when empty
+    if window and pos >= C:
+        base = pos - C + 1
+        kpos = ((jnp.arange(C) - (base % C)) % C + base).astype(jnp.int32)
+    else:
+        kpos = jnp.where(jnp.arange(C) < filled, jnp.arange(C), -1).astype(jnp.int32)
+    out = decode_attention(q, k, v, kpos, jnp.int32(pos), window=window,
+                           block_k=bk, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kpos, jnp.int32(pos),
+                                    window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_decode_attention_matches_model_path():
+    """The kernel must agree with the model's decode_attend (the jnp serve
+    path used in the dry-run)."""
+    from repro.kernels.decode_attention import decode_attention
+    from repro.models import attention as mattn
+    B, C, J, G, hd = 2, 128, 2, 3, 64
+    ks = jax.random.split(jax.random.key(6), 3)
+    q = _rand(ks[0], (B, 1, J, G, hd), jnp.float32)
+    cache = {"k": _rand(ks[1], (B, C, J, hd), jnp.float32),
+             "v": _rand(ks[2], (B, C, J, hd), jnp.float32),
+             "kpos": jnp.where(jnp.arange(C) < 100, jnp.arange(C), -1).astype(jnp.int32)}
+    want = mattn.decode_attend(q, cache, jnp.int32(99))
+    got = decode_attention(q, cache["k"], cache["v"], cache["kpos"],
+                           jnp.int32(99), block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_kernels_integrate_into_model_path():
+    """cfg.use_pallas routes the transformer's attention through the Pallas
+    kernels (interpret mode) and must match the jnp path end-to-end."""
+    import dataclasses
+    from repro import configs
+    from repro.models import build, materialize_batch
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    cfg_k = dataclasses.replace(cfg, use_pallas=True)
+    m, mk = build(cfg), build(cfg_k)
+    params = m.init(jax.random.key(0), jnp.float32)
+    batch = materialize_batch(cfg, 2, 32, jax.random.key(1), jnp.float32)
+    l1, l2 = m.train_loss(params, batch), mk.train_loss(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+    # serve path
+    c1 = m.init_cache(2, 64, jnp.float32)
+    c2 = mk.init_cache(2, 64, jnp.float32)
+    lo1, c1 = m.prefill(params, batch, c1)
+    lo2, c2 = mk.prefill(params, batch, c2)
+    np.testing.assert_allclose(np.asarray(lo1), np.asarray(lo2), atol=2e-4)
+    tok = jnp.argmax(lo1, -1).astype(jnp.int32)
+    d1, _ = m.decode_step(params, tok, c1, jnp.int32(32))
+    d2, _ = mk.decode_step(params, tok, c2, jnp.int32(32))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=2e-4)
+
+
+@pytest.mark.parametrize("name", ["falcon-mamba-7b", "recurrentgemma-2b"])
+def test_linrec_kernel_integrates_into_recurrent_models(name):
+    import dataclasses
+    from repro import configs
+    from repro.models import build, materialize_batch
+    cfg = configs.get(name).reduced()
+    cfg_k = dataclasses.replace(cfg, use_pallas=True)
+    m, mk = build(cfg), build(cfg_k)
+    params = m.init(jax.random.key(0), jnp.float32)
+    batch = materialize_batch(cfg, 1, 128, jax.random.key(1), jnp.float32)
+    l1, l2 = m.train_loss(params, batch), mk.train_loss(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-4)

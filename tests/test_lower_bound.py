@@ -1,0 +1,113 @@
+"""Tests for the zero-chain hard instances (paper Appendix B, Lemmas 7-8)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lower_bound as lb
+
+
+def test_psi_phi_basic():
+    assert float(lb.psi(0.4)) == 0.0
+    assert float(lb.psi(0.5)) == 0.0
+    # psi(1) = exp(1 - 1) = 1
+    assert float(lb.psi(1.0)) == pytest.approx(1.0, abs=1e-6)
+    # phi(inf) = sqrt(2 pi e); phi(-inf) = 0
+    assert float(lb.phi(20.0)) == pytest.approx(math.sqrt(2 * math.pi * math.e), rel=1e-6)
+    assert float(lb.phi(-20.0)) == pytest.approx(0.0, abs=1e-6)
+    # psi is smooth at the boundary: grad at 0.5 is 0
+    g = jax.grad(lambda z: lb.psi(z))(0.5)
+    assert float(g) == 0.0
+
+
+def test_h_split_identity():
+    """Lemma 8.1: (h1 + h2) / 2 == h."""
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        x = jnp.asarray(rng.normal(size=11), jnp.float32)
+        lhs = 0.5 * (lb.h1(x) + lb.h2(x))
+        np.testing.assert_allclose(float(lhs), float(lb.h(x)), rtol=1e-5, atol=1e-6)
+
+
+def test_zero_chain_property():
+    """prog(grad h(x)) <= prog(x) + 1 — one oracle call advances at most one
+    coordinate (Appendix B.1)."""
+    d = 12
+    rng = np.random.default_rng(1)
+    for j in range(0, d, 3):
+        x = np.zeros(d, np.float32)
+        x[:j] = rng.normal(size=j) + 1.0
+        g = jax.grad(lb.h)(jnp.asarray(x))
+        assert int(lb.prog(g)) <= j + 1
+
+
+def test_lemma8_alternating_progress():
+    """Lemma 8.2: if prog(x) is odd, grad h1 makes no progress; if even,
+    grad h2 makes no progress — nodes must alternate via the network."""
+    d = 12
+    rng = np.random.default_rng(2)
+    for j in range(1, d - 1):
+        x = np.zeros(d, np.float32)
+        # coordinates past psi's dead zone (|x| > 1/2) so the chain is live
+        x[:j] = rng.uniform(1.0, 2.0, size=j)
+        assert int(lb.prog(jnp.asarray(x))) == j
+        g1 = jax.grad(lb.h1)(jnp.asarray(x))
+        g2 = jax.grad(lb.h2)(jnp.asarray(x))
+        if j % 2 == 1:
+            assert int(lb.prog(g1)) <= j, f"h1 advanced at odd prog {j}"
+            assert int(lb.prog(g2)) == j + 1, f"h2 should advance at odd prog {j}"
+        else:
+            assert int(lb.prog(g2)) <= j, f"h2 advanced at even prog {j}"
+            assert int(lb.prog(g1)) == j + 1, f"h1 should advance at even prog {j}"
+
+
+def test_grad_h_nonzero_before_chain_end():
+    """Lemma 7.4: ||grad h||_inf >= 1 whenever x_d = 0."""
+    d = 8
+    rng = np.random.default_rng(3)
+    for j in range(0, d - 1):
+        x = np.zeros(d, np.float32)
+        x[:j] = rng.normal(size=j)
+        g = jax.grad(lb.h)(jnp.asarray(x))
+        assert float(jnp.abs(g).max()) >= 1.0 - 1e-5
+
+
+def test_instance1_oracle_unbiased_and_bounded_variance():
+    inst = lb.make_instance1(L=1.0, Delta=1.0, sigma=1.0, n=4, T=64)
+    x = jnp.zeros(inst.d, jnp.float32).at[0].set(1.0)
+    g = inst.grad_f(x)
+    samples = jnp.stack([inst.oracle(x, jax.random.key(s)) for s in range(300)])
+    mean = samples.mean(0)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(g), atol=0.15)
+    var = float(jnp.mean(jnp.sum((samples - g[None]) ** 2, axis=-1)))
+    assert var <= 1.0 * 1.3  # sigma^2 = 1, allow sampling slack
+
+
+def test_instance1_oracle_zero_respecting():
+    """The oracle can only reveal coordinate prog(x) + 1."""
+    inst = lb.make_instance1(L=1.0, Delta=1.0, sigma=1.0, n=4, T=64)
+    x = jnp.zeros(inst.d, jnp.float32).at[:3].set(1.0)
+    for s in range(10):
+        o = inst.oracle(x, jax.random.key(s))
+        assert int(lb.prog(o)) <= 4
+
+
+def test_instance2_smoothness_budget():
+    """(14): d * lam^2 <= 2 ell0 Delta / (L delta0)."""
+    inst = lb.make_instance2(L=2.0, Delta=1.0, n=16, beta=0.9, T=200)
+    assert inst.d * inst.lam ** 2 <= 2 * lb.ELL0 * 1.0 / (2.0 * lb.DELTA0) + 1e-9
+
+
+def test_instance2_node_assignment():
+    inst = lb.make_instance2(L=1.0, Delta=1.0, n=16, beta=0.75, T=100)
+    assert inst.set1 == tuple(range(4))
+    assert inst.set2 == tuple(range(12, 16))
+    x = jnp.ones(inst.d, jnp.float32)
+    # middle nodes have zero loss and zero gradient
+    assert float(inst.f_i(8, x)) == 0.0
+    g = inst.grad_stacked(jnp.broadcast_to(x, (16, inst.d)))
+    assert float(jnp.abs(g[8]).max()) == 0.0
+    assert float(jnp.abs(g[0]).max()) > 0.0

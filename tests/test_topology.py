@@ -1,0 +1,110 @@
+"""Unit tests for time-varying topologies and effective distance (paper §3)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+
+
+def test_sun_shaped_star_and_complete():
+    # |C| = 1 -> star; |C| = n (or n-1) -> complete (paper Def. 1 remark)
+    star = topo.sun_shaped_graph(8, [0])
+    assert np.array_equal(star, topo.star_graph(8, 0))
+    comp = topo.sun_shaped_graph(8, list(range(8)))
+    assert np.array_equal(comp, topo.complete_graph(8))
+    comp2 = topo.sun_shaped_graph(8, list(range(7)))
+    # |C| = n-1: node 7 connects to all of C and C is complete -> complete graph
+    assert np.array_equal(comp2, topo.complete_graph(8))
+
+
+def test_sun_shaped_structure():
+    adj = topo.sun_shaped_graph(8, [2, 3])
+    # rim-rim links absent
+    assert not adj[0, 1] and not adj[5, 7]
+    # center-anything present, symmetric
+    assert adj[2, 6] and adj[6, 2] and adj[2, 3]
+    assert np.array_equal(adj, adj.T)
+
+
+def test_static_distance_reduces_to_graph_distance():
+    # Definition 2 remark: static schedule -> canonical graph distance
+    ring = topo.StaticSchedule(topo.ring_graph(8))
+    assert topo.effective_distance(ring, [0], [4]) == 4
+    assert topo.effective_distance(ring, [0], [1]) == 1
+    assert topo.effective_diameter(ring) == 4
+    star = topo.StaticSchedule(topo.star_graph(6, 0))
+    assert topo.effective_diameter(star) == 2
+
+
+@pytest.mark.parametrize("n,beta", [(8, 0.5), (16, 0.75), (16, 1 - 1 / 16),
+                                    (32, 0.9), (12, 0.0), (9, 0.5)])
+def test_theorem3_distance_matches_formula(n, beta):
+    """Effective distance of the constructed schedule == eq. (5)."""
+    size = max(1, math.ceil(n / 4))
+    I1 = tuple(range(size))
+    I2 = tuple(range(n - size, n))
+    sched = topo.sun_shaped_schedule(n, beta, avoid=I1 + I2)
+    got = topo.effective_distance(sched, I1, I2, period=sched.period)
+    want = topo.theorem3_distance_formula(n, beta, size, size)
+    assert got == want, (got, want)
+
+
+def test_theorem3_distance_theta_bound():
+    """dist = Theta(1/(1-beta)) when the far sets have Omega(n) mass."""
+    n = 32
+    for beta in [0.5, 0.75, 0.9, 1 - 1 / n]:
+        size = math.ceil(n / 4)
+        d = topo.theorem3_distance_formula(n, beta, size, size)
+        lo = (1 - size * 2 / n) / (1 - beta) / 2
+        hi = (1 - size * 2 / n) / (1 - beta) + 1
+        assert lo <= d <= hi + 1, (beta, d, lo, hi)
+
+
+def test_one_peer_exponential_every_node_one_peer():
+    sched = topo.one_peer_exponential_schedule(16)
+    for t in range(sched.period):
+        adj = sched(t)
+        offdiag = adj & ~np.eye(16, dtype=bool)
+        # every node has exactly one peer at each round
+        assert (offdiag.sum(axis=1) == 1).all()
+    # full mixing within log2(n) rounds: diameter == log2 n hops... effective
+    # diameter over the periodic schedule is at most period
+    assert topo.effective_diameter(sched) <= sched.period + 1
+
+
+def test_federated_schedule():
+    sched = topo.federated_schedule(8, local_steps=3)
+    assert sched.period == 4
+    assert np.array_equal(sched(3), topo.complete_graph(8))
+    # the three local rounds are identity graphs
+    for t in range(3):
+        assert np.array_equal(sched(t), np.eye(8, dtype=bool))
+    # effective distance: any two nodes meet at the global-averaging round
+    assert topo.effective_diameter(sched) <= 4
+
+
+def test_effective_distance_min_over_start_round():
+    """Definition 2 takes the min over start rounds: starting right before
+    the averaging round of a federated schedule gives distance 1."""
+    sched = topo.federated_schedule(8, local_steps=5)
+    assert topo.effective_distance(sched, [0], [5], period=sched.period) == 1
+
+
+def test_random_matching_schedule():
+    sched = topo.random_matching_schedule(12, period=8, seed=1)
+    for t in range(sched.period):
+        adj = sched(t)
+        off = adj & ~np.eye(12, dtype=bool)
+        assert (off.sum(axis=1) == 1).all(), "not a perfect matching"
+        assert np.array_equal(adj, adj.T)
+    # per-round matrices are doubly stochastic on the right sparsity pattern;
+    # a single matching has beta = 1 (no per-round contraction — same as
+    # one-peer exponential), connectivity comes from the product over the
+    # period, which must mix:
+    from repro.core import gossip
+    ws = gossip.schedule_from_topology(sched)
+    for t in range(ws.period):
+        gossip.check_assumption3(ws(t), sched(t), beta=1.0)
+    assert gossip.consensus_contraction(ws, ws.period) < 0.5
