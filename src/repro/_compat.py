@@ -1,0 +1,113 @@
+"""Compatibility shims for the explicit-mesh jax API on jax 0.4.x.
+
+The distributed runtime (:mod:`repro.dist`) and its tests are written
+against the newer sharding surface:
+
+* ``jax.set_mesh(mesh)`` context manager,
+* ``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``,
+* ``PartitionSpec``-valued ``in_shardings`` / ``out_shardings`` on
+  ``jax.jit`` (resolved against the ambient mesh).
+
+On jax versions that already provide these (>= 0.5-era explicit sharding)
+this module is a no-op.  On 0.4.x each missing piece is emulated:
+``set_mesh`` tracks the ambient mesh in a thread-local and enters the
+legacy ``with mesh:`` context, and ``jax.jit`` is wrapped so PartitionSpec
+entries in the shardings pytrees are bound to that mesh as NamedShardings
+(jit then reshards mismatched committed inputs automatically).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+
+def current_mesh():
+    """The mesh installed by the (shimmed) ``jax.set_mesh``, or None."""
+    return getattr(_state, "mesh", None)
+
+
+# -- jax.sharding.AxisType ---------------------------------------------------
+
+if not hasattr(jax.sharding, "AxisType"):
+    class _AxisType:
+        """Stand-in for jax.sharding.AxisType (all axes behave as Auto on
+        0.4.x, which is what every mesh in this repo requests)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = _AxisType
+
+
+# -- jax.make_mesh(axis_types=...) -------------------------------------------
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _orig_make_mesh = jax.make_mesh
+
+    @functools.wraps(_orig_make_mesh)
+    def _make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # Auto-only on 0.4.x
+        return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = _make_mesh
+
+
+# -- pallas TPU CompilerParams rename ----------------------------------------
+
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+
+    if not hasattr(_pltpu, "CompilerParams"):
+        _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+except ImportError:  # pragma: no cover
+    pass
+
+
+# -- jax.set_mesh + PartitionSpec shardings on jax.jit -----------------------
+
+if not hasattr(jax, "set_mesh"):
+
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        prev = current_mesh()
+        _state.mesh = mesh
+        try:
+            with mesh:
+                yield mesh
+        finally:
+            _state.mesh = prev
+
+    jax.set_mesh = _set_mesh
+
+    _orig_jit = jax.jit
+
+    def _bind_specs(mesh, tree):
+        def conv(x):
+            if isinstance(x, PartitionSpec):
+                return NamedSharding(mesh, x)
+            return x
+
+        return jax.tree.map(
+            conv, tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    @functools.wraps(_orig_jit)
+    def _jit(fun=None, **kwargs):
+        mesh = current_mesh()
+        if mesh is not None:
+            for name in ("in_shardings", "out_shardings"):
+                if kwargs.get(name) is not None:
+                    kwargs[name] = _bind_specs(mesh, kwargs[name])
+        if fun is None:
+            return functools.partial(_jit, **kwargs)
+        return _orig_jit(fun, **kwargs)
+
+    jax.jit = _jit

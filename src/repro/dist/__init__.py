@@ -1,0 +1,14 @@
+"""Distributed runtime: mesh-axis sharding rules, collective utilities and
+jitted decentralized train/serve steps over a jax mesh.
+
+* :mod:`repro.dist.sharding` — PartitionSpecs for params, stacked node
+  states, caches and batches on any of the repo's meshes.
+* :mod:`repro.dist.collectives` — mesh-axis helpers, stacked-pytree
+  flattening, and the fused Pallas multi-consensus path.
+* :mod:`repro.dist.steps` — ``make_train_step`` (MC-DSGT / DSGT / DSGD),
+  ``make_prefill_step`` and ``make_serve_step``.
+"""
+
+from . import collectives, sharding, steps  # noqa: F401
+from .sharding import batch_specs, n_nodes, param_specs  # noqa: F401
+from .steps import TrainState, make_prefill_step, make_serve_step, make_train_step  # noqa: F401

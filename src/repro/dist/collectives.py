@@ -1,0 +1,128 @@
+"""Mesh-axis helpers and collective utilities shared by the distributed
+sharding rules and the jitted steps.
+
+Axis-name contract (see ``launch/mesh.py``):
+
+* the decentralized **node** axis is ``"node"`` when present (hierarchical
+  mesh), else ``("pod", "data")`` on the multi-pod mesh, else ``"data"``;
+* **tensor-parallel** width is the combined ``("fsdp", "model")`` group —
+  every sharded weight dimension is split over the whole group so the
+  hierarchical mesh gets fsdp x model ways per node copy.
+
+Also hosts the fused Pallas multi-consensus: the whole stacked state is
+flattened to one ``(n, D)`` matrix and pushed through the
+``kernels.gossip_matmul.gossip_mix`` kernel, which chains all R gossip
+rounds in VMEM with exactly one HBM read/write of the state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis helpers (operate on .axis_names / .shape only, so unit tests can
+# pass a mocked mesh object)
+# ---------------------------------------------------------------------------
+
+def node_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes carrying the decentralized node dimension."""
+    names = tuple(mesh.axis_names)
+    if "node" in names:
+        return ("node",)
+    if "pod" in names and "data" in names:
+        return ("pod", "data")
+    if "data" in names:
+        return ("data",)
+    return ()
+
+
+def tp_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes carrying the tensor-parallel (weight-sharding) dimension."""
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in ("fsdp", "model") if a in names)
+
+
+def axis_size(mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def n_nodes(mesh) -> int:
+    return axis_size(mesh, node_axes(mesh))
+
+
+def spec_entry(axes: Sequence[str]):
+    """PartitionSpec entry for an axis group: name, tuple of names, or None."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def fit(dim: int, axes: Sequence[str], mesh):
+    """``spec_entry(axes)`` when the axis group evenly divides ``dim``, else
+    None (jax requires divisible shard sizes)."""
+    if axes and dim % axis_size(mesh, axes) == 0:
+        return spec_entry(axes)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Pytree numerics helpers
+# ---------------------------------------------------------------------------
+
+def tree_cast(tree: PyTree, dtype: Optional[jnp.dtype]) -> PyTree:
+    if dtype is None:
+        return tree
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-pytree <-> (n, D) matrix
+# ---------------------------------------------------------------------------
+
+def flatten_stacked(tree: PyTree):
+    """Flatten a node-stacked pytree (every leaf (n, ...)) into one f32
+    ``(n, D_total)`` matrix plus the metadata to invert the transform."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    mat = jnp.concatenate(
+        [leaf.reshape(n, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+    meta = (treedef, [(leaf.shape, leaf.dtype) for leaf in leaves])
+    return mat, meta
+
+
+def unflatten_stacked(mat: jax.Array, meta) -> PyTree:
+    treedef, infos = meta
+    out, off = [], 0
+    for shape, dtype in infos:
+        size = math.prod(shape[1:]) if len(shape) > 1 else 1
+        out.append(mat[:, off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def fused_multi_consensus(Ws: jax.Array, tree: PyTree, *, block_d: int = 1024,
+                          interpret: bool = True) -> PyTree:
+    """Algorithm 2 through the Pallas ``gossip_mix`` kernel: one fused pass
+    applying all R matrices with a single HBM round-trip of the state.
+
+    ``interpret=True`` is the CPU fallback (Python interpretation of the
+    kernel body); set False on real TPU hardware.
+    """
+    from ..kernels import ops
+
+    mat, meta = flatten_stacked(tree)
+    n, D = mat.shape
+    bd = min(block_d, D)
+    pad = (-D) % bd
+    if pad:  # zero columns mix to zero under any W, sliced away below
+        mat = jnp.pad(mat, ((0, 0), (0, pad)))
+    out = ops.gossip_mix(Ws.astype(jnp.float32), mat, use_pallas=True,
+                         interpret=interpret, block_d=bd)
+    return unflatten_stacked(out[:, :D], meta)

@@ -1,0 +1,166 @@
+"""PartitionSpec rules for every pytree the runtime moves over a mesh.
+
+``param_specs`` maps model/state/cache pytrees to PartitionSpecs by leaf
+*name* (the leaf names in ``models/*.py`` are load-bearing):
+
+* weight matrices shard one dimension over the combined tensor-parallel
+  group ``("fsdp", "model")`` — attention q/kv heads (falling back to
+  head_dim per ``cfg.attn_shard_fallback``), MoE experts, embedding vocab,
+  and the last (else first) dimension of generic matrices;
+* cache leaves (``k``/``v``/``conv``/``h``/...) shard their batch dimension
+  over the node/data axes and KV heads over the tensor-parallel group;
+* ``stacked_nodes=True`` prepends the node axes to every leaf (the leading
+  node dimension of MC-DSGT's stacked state), ``audio_cache=True`` prepends
+  a replicated layer-stack axis (the encoder-decoder cache is vmapped over
+  layers instead of scan-stacked under a ``units`` key);
+* any dimension the mesh does not evenly divide is replicated instead —
+  the rules degrade, never error, as meshes shrink.
+
+Only ``mesh.axis_names`` and ``mesh.shape`` are consulted, so the fast unit
+tests drive these functions with a mocked mesh object.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .collectives import fit, n_nodes, node_axes, spec_entry, tp_axes  # noqa: F401
+
+PyTree = Any
+
+# leaf names that belong to serve caches / recurrent state, not weights
+_CACHE_POS = ("kpos", "cross_kpos")
+_CACHE_KV = ("k", "v", "cross_k", "cross_v")
+_CACHE_STATE = ("conv", "h")
+# param collections stacked over a leading layer axis (scan/vmap)
+_STACKED_COLLECTIONS = ("units", "enc", "dec")
+# path keys marking attention parameter groups
+_ATTN_GROUPS = ("attn", "self", "cross")
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return out
+
+
+def _attn_spec(name, dims, cfg, mesh, tp):
+    """wq (D, H, hd) / wk, wv (D, KV, hd) / wo (H, hd, D) / b{q,k,v} (H, hd)."""
+    if name in ("wq", "wk", "wv") and len(dims) == 3:
+        heads = fit(dims[1], tp, mesh)
+        if heads is not None:
+            return [None, heads, None]
+        if getattr(cfg, "attn_shard_fallback", "head_dim") == "head_dim":
+            return [None, None, fit(dims[2], tp, mesh)]
+        return [None, None, None]
+    if name == "wo" and len(dims) == 3:
+        return [fit(dims[0], tp, mesh), None, None]
+    if name in ("bq", "bk", "bv") and len(dims) == 2:
+        return [fit(dims[0], tp, mesh), None]
+    return None
+
+
+def _moe_spec(name, dims, mesh, tp):
+    """router (D, E) / wi, wg (E, D, F) / wo (E, F, D) — expert-parallel when
+    E divides the group, else shard the expert FFN dimension."""
+    if name == "router" and len(dims) == 2:
+        return [None, fit(dims[1], tp, mesh)]
+    if name in ("wi", "wg") and len(dims) == 3:
+        experts = fit(dims[0], tp, mesh)
+        if experts is not None:
+            return [experts, None, None]
+        return [None, None, fit(dims[2], tp, mesh)]
+    if name == "wo" and len(dims) == 3:
+        experts = fit(dims[0], tp, mesh)
+        if experts is not None:
+            return [experts, None, None]
+        return [None, fit(dims[1], tp, mesh), None]
+    return None
+
+
+def _cache_spec(name, dims, mesh, nd, tp):
+    if name in _CACHE_POS:
+        return [None] * len(dims)
+    if name in _CACHE_KV and len(dims) == 4:  # (B, C, KV, hd)
+        return [fit(dims[0], nd, mesh), None, fit(dims[2], tp, mesh), None]
+    # conv / recurrent state: (B, ...) — batch-shard only
+    return [fit(dims[0], nd, mesh)] + [None] * (len(dims) - 1)
+
+
+def _generic_spec(dims, mesh, tp):
+    if len(dims) < 2:
+        return [None] * len(dims)
+    last = fit(dims[-1], tp, mesh)
+    if last is not None:
+        return [None] * (len(dims) - 1) + [last]
+    first = fit(dims[0], tp, mesh)
+    return [first] + [None] * (len(dims) - 1)
+
+
+def _leaf_spec(path, leaf, cfg, mesh, *, stacked_nodes, audio_cache):
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    dims = list(leaf.shape)
+    prefix = []
+    if stacked_nodes and dims:
+        prefix.append(fit(dims[0], node_axes(mesh), mesh))
+        dims = dims[1:]
+    if dims and (audio_cache or any(k in names for k in _STACKED_COLLECTIONS)):
+        prefix.append(None)  # scan/vmap layer-stack axis stays replicated
+        dims = dims[1:]
+
+    nd, tp = node_axes(mesh), tp_axes(mesh)
+    body = None
+    if name in _CACHE_POS + _CACHE_KV + _CACHE_STATE:
+        body = _cache_spec(name, dims, mesh, nd, tp)
+    elif any(g in names for g in _ATTN_GROUPS):
+        body = _attn_spec(name, dims, cfg, mesh, tp)
+    elif "moe" in names:
+        body = _moe_spec(name, dims, mesh, tp)
+    if body is None and name == "embedding" and len(dims) == 2:
+        body = [fit(dims[0], tp, mesh), None]
+    if body is None and name == "unembed" and len(dims) == 2:
+        body = [None, fit(dims[1], tp, mesh)]
+    if body is None:
+        body = _generic_spec(dims, mesh, tp)
+    return P(*(prefix + body))
+
+
+def param_specs(tree: PyTree, cfg, mesh, *, stacked_nodes: bool = False,
+                audio_cache: bool = False) -> PyTree:
+    """PartitionSpecs for a params / tracker-state / serve-cache pytree.
+
+    ``stacked_nodes``: leaves carry a leading node dimension (MC-DSGT state);
+    ``audio_cache``: leaves carry a leading per-layer stack dimension (the
+    encoder-decoder cache layout).
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, cfg, mesh,
+                                      stacked_nodes=stacked_nodes,
+                                      audio_cache=audio_cache),
+        tree)
+
+
+def batch_specs(batch: PyTree, mesh, *, stacked_nodes: bool = False) -> PyTree:
+    """Specs for an input batch: the leading dimension (node axis when
+    ``stacked_nodes``, else the global batch) shards over the node/data axes;
+    everything downstream of it is replicated."""
+    del stacked_nodes  # same leading-axis rule either way
+    nd = node_axes(mesh)
+
+    def one(leaf):
+        dims = leaf.shape
+        if not dims:
+            return P()
+        return P(*([fit(dims[0], nd, mesh)] + [None] * (len(dims) - 1)))
+
+    return jax.tree.map(one, batch)

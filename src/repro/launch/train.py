@@ -67,6 +67,11 @@ def main(argv=None):
                              "federated", "complete", "random-matching"])
     ap.add_argument("--algo", default="mc_dsgt",
                     choices=["mc_dsgt", "dsgt", "dsgd"])
+    ap.add_argument("--gossip-impl", default="dense",
+                    choices=["dense", "pallas"],
+                    help="multi-consensus path: GSPMD einsum (dense) or the "
+                         "fused Pallas gossip_mix kernel (interpret-mode "
+                         "fallback on CPU)")
     ap.add_argument("--R", type=int, default=2)
     ap.add_argument("--gamma", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=2)
@@ -91,7 +96,9 @@ def main(argv=None):
     stream = token_stream_for(cfg, n, R, args.batch, args.seq, seed=args.seed,
                               active_vocab=args.active_vocab)
     init_state, warm_start, train_step = dsteps.make_train_step(
-        model, cfg, algo=args.algo, gamma=args.gamma, R=R)
+        model, cfg, algo=args.algo, gamma=args.gamma, R=R,
+        gossip_impl=args.gossip_impl,
+        pallas_interpret=jax.default_backend() != "tpu")
 
     state = init_state(jax.random.key(args.seed), n, jnp.float32)
     start_step = 0

@@ -1,0 +1,194 @@
+"""Fast in-process unit tests for `repro.dist.sharding` and the fused
+Pallas gossip path.
+
+No real device mesh is needed: the sharding rules consult only
+``mesh.axis_names`` and ``mesh.shape``, so a mocked mesh object drives
+every branch (stacked nodes, audio cache, hierarchical / multi-pod axes,
+divisibility fallbacks) without the 8-device subprocess harness."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.core import algorithms as alg, gossip
+from repro.dist import collectives as coll
+from repro.dist import sharding as shd
+from repro.models import build
+
+
+def mock_mesh(**axes):
+    return types.SimpleNamespace(axis_names=tuple(axes), shape=dict(axes))
+
+
+MESH_42 = mock_mesh(data=4, model=2)
+MESH_HIER = mock_mesh(node=2, fsdp=2, model=2)
+MESH_POD = mock_mesh(pod=2, data=16, model=16)
+
+
+def _shapes(cfg, dtype=jnp.float32):
+    model = build(cfg)
+    return model, jax.eval_shape(lambda: model.init(jax.random.key(0), dtype))
+
+
+# ---------------------------------------------------------------------------
+# axis helpers
+# ---------------------------------------------------------------------------
+
+def test_n_nodes_per_mesh_flavour():
+    assert shd.n_nodes(MESH_42) == 4
+    assert shd.n_nodes(MESH_HIER) == 2
+    assert shd.n_nodes(MESH_POD) == 32
+    assert coll.tp_axes(MESH_42) == ("model",)
+    assert coll.tp_axes(MESH_HIER) == ("fsdp", "model")
+    assert coll.node_axes(MESH_POD) == ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# param_specs: dense transformer
+# ---------------------------------------------------------------------------
+
+def test_param_specs_dense_transformer():
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    _, params = _shapes(cfg)
+    specs = shd.param_specs(params, cfg, MESH_42)
+    # embedding (V, D): vocab over the tensor-parallel axis
+    assert specs["embed"]["embedding"] == P("model", None)
+    assert specs["final_norm"]["scale"] == P(None)
+    unit = specs["units"]["0_attn"]
+    # wq (units, D, H, hd): heads divide the model axis
+    assert unit["attn"]["wq"] == P(None, None, "model", None)
+    assert unit["attn"]["wo"] == P(None, "model", None, None)
+    # mlp wi (units, D, F): generic rule shards the last dim
+    assert unit["mlp"]["wi"] == P(None, None, "model")
+    assert unit["ln1"]["scale"] == P(None, None)
+
+
+def test_param_specs_stacked_nodes_prepends_node_axis():
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    model, params = _shapes(cfg)
+
+    def stack(n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), params)
+
+    specs = shd.param_specs(stack(4), cfg, MESH_42, stacked_nodes=True)
+    assert specs["embed"]["embedding"] == P("data", "model", None)
+    assert specs["units"]["0_attn"]["attn"]["wq"] == \
+        P("data", None, None, "model", None)
+    # hierarchical mesh: node axis + combined fsdp x model group
+    specs2 = shd.param_specs(stack(2), cfg, MESH_HIER, stacked_nodes=True)
+    assert specs2["units"]["0_attn"]["attn"]["wq"] == \
+        P("node", None, None, ("fsdp", "model"), None)
+
+
+def test_param_specs_divisibility_fallbacks():
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    _, params = _shapes(cfg)
+    # model=3 divides neither vocab (512) nor d_ff (512) -> replicate
+    specs = shd.param_specs(params, cfg, mock_mesh(data=2, model=3))
+    assert specs["embed"]["embedding"] == P(None, None)
+    assert specs["units"]["0_attn"]["mlp"]["wi"] == P(None, None, None)
+    # model=8 exceeds the 4 heads -> attn_shard_fallback shards head_dim
+    specs8 = shd.param_specs(params, cfg, mock_mesh(data=1, model=8))
+    assert specs8["units"]["0_attn"]["attn"]["wq"] == \
+        P(None, None, None, "model")
+
+
+def test_param_specs_moe_expert_parallel():
+    cfg = configs.get("granite-moe-3b-a800m").reduced()
+    _, params = _shapes(cfg)
+    specs = shd.param_specs(params, cfg, MESH_42)
+    moe = specs["units"]["0_moe"]["moe"]
+    # wi (units, E, D, F): E=4 divides model=2 -> expert-parallel
+    assert moe["wi"] == P(None, "model", None, None)
+    assert moe["router"] == P(None, None, "model")
+    # E=4 does not divide model=8 -> falls back to the expert FFN dim
+    specs8 = shd.param_specs(params, cfg, mock_mesh(data=1, model=8))
+    assert specs8["units"]["0_moe"]["moe"]["wi"] == P(None, None, None, "model")
+
+
+# ---------------------------------------------------------------------------
+# param_specs: caches (including the audio_cache branch)
+# ---------------------------------------------------------------------------
+
+def test_cache_specs_transformer():
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    model = build(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(8, 64, jnp.float32))
+    specs = shd.param_specs(cache, cfg, MESH_42)
+    # k (units, B, C, KV, hd): batch over data, KV heads over model
+    assert specs["units"]["0_attn"]["k"] == P(None, "data", None, "model", None)
+    assert specs["units"]["0_attn"]["kpos"] == P(None, None)
+
+
+def test_cache_specs_audio():
+    cfg = configs.get("whisper-tiny").reduced()
+    model = build(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(8, 64, jnp.float32))
+    specs = shd.param_specs(cache, cfg, MESH_42, audio_cache=True)
+    # every leaf is stacked over a leading (replicated) layer axis
+    assert specs["self"]["k"] == P(None, "data", None, "model", None)
+    assert specs["cross_k"] == P(None, "data", None, "model", None)
+    assert specs["cross_kpos"] == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# batch_specs
+# ---------------------------------------------------------------------------
+
+def test_batch_specs():
+    tok = jax.ShapeDtypeStruct((4, 2, 2, 32), jnp.int32)
+    specs = shd.batch_specs({"tokens": tok}, MESH_42, stacked_nodes=True)
+    assert specs["tokens"] == P("data", None, None, None)
+    # serve batch: global batch over data
+    tok2 = jax.ShapeDtypeStruct((32, 128), jnp.int32)
+    assert shd.batch_specs({"t": tok2}, MESH_42)["t"] == P("data", None)
+    # multi-pod: node dimension spans (pod, data)
+    tok3 = jax.ShapeDtypeStruct((32, 2, 4, 128), jnp.int32)
+    specs3 = shd.batch_specs({"tokens": tok3}, MESH_POD, stacked_nodes=True)
+    assert specs3["tokens"] == P(("pod", "data"), None, None, None)
+    # non-divisible leading dim -> replicated
+    tok4 = jax.ShapeDtypeStruct((3, 128), jnp.int32)
+    assert shd.batch_specs({"t": tok4}, MESH_42)["t"] == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas multi-consensus (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_fused_multi_consensus_matches_dense():
+    n, R = 8, 3
+    sched = gossip.theorem3_weight_schedule(n, 0.75)
+    Ws = jnp.asarray(sched.stacked(0, R))
+    key = jax.random.key(0)
+    tree = {
+        "a": jax.random.normal(key, (n, 5, 7)),
+        "b": {"c": jax.random.normal(jax.random.fold_in(key, 1), (n, 33)),
+              "d": jax.random.normal(jax.random.fold_in(key, 2),
+                                     (n, 4)).astype(jnp.bfloat16)},
+    }
+    want = alg.multi_consensus(Ws, tree)
+    got = coll.fused_multi_consensus(Ws, tree, block_d=16, interpret=True)
+    for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        assert w.dtype == g.dtype
+        np.testing.assert_allclose(np.asarray(w, np.float32),
+                                   np.asarray(g, np.float32),
+                                   atol=2e-2 if w.dtype == jnp.bfloat16
+                                   else 1e-5)
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": jnp.arange(12.0).reshape(4, 3),
+            "b": jnp.ones((4, 2, 2), jnp.bfloat16)}
+    mat, meta = coll.flatten_stacked(tree)
+    assert mat.shape == (4, 3 + 4)
+    back = coll.unflatten_stacked(mat, meta)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
