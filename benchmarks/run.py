@@ -273,6 +273,41 @@ def bench_kernels(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Gossip planning: dense einsum vs structured lowering, per topology
+# ---------------------------------------------------------------------------
+
+def bench_gossip_plan(quick: bool) -> None:
+    """Times one full schedule period of multi-consensus on an (n, D) state:
+    the dense einsum stack vs the structured GossipPlan lowering the auto
+    dispatcher picks.  derived = auto path us, speedup, the plan's round
+    kinds, and max |dense - auto| (must be ~0)."""
+    from repro.core import algorithms as alg
+    from repro.dist.collectives import stage_plan
+    from repro.launch.train import make_weight_schedule
+
+    n = 16
+    D = 65536 if quick else 1 << 20
+    x = jax.random.normal(jax.random.key(0), (n, D))
+    for kind in ("sun", "one-peer-exp", "federated", "complete",
+                 "random-matching", "erdos-renyi"):
+        sched = make_weight_schedule(kind, n, 0.75)
+        P = sched.period
+        plan = sched.plan(0, P)
+        Ws = jnp.asarray(sched.stacked(0, P))
+        tensors = stage_plan(plan)
+        mixer = alg.make_plan_mixer(plan, mode="static")
+        dense_f = jax.jit(lambda Ws, x: alg.multi_consensus(Ws, x))
+        auto_f = jax.jit(lambda T, x: mixer(T, 0, P, x))
+        us_d, out_d = _timed(dense_f, Ws, x)
+        us_a, out_a = _timed(auto_f, tensors, x)
+        err = float(jnp.abs(out_d - out_a).max())
+        kinds = ",".join(sorted(set(plan.kinds)))
+        record(f"gossip_plan_{kind}", us_d,
+               f"auto_us={us_a:.1f}|speedup={us_d / max(us_a, 1e-9):.2f}x"
+               f"|kinds={kinds}|err={err:.1e}")
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary (from dry-run artifacts)
 # ---------------------------------------------------------------------------
 
@@ -296,11 +331,16 @@ def bench_roofline(quick: bool) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results to a BENCH json (default "
+                         "experiments/bench/BENCH.json under --quick)")
     args, _ = ap.parse_known_args()
     quick = args.quick
+    json_path = args.json or (quick and "experiments/bench/BENCH.json" or None)
 
     print("name,us_per_call,derived")
     bench_theorem3(quick)
+    bench_gossip_plan(quick)
     bench_kernels(quick)
     bench_theorem4(quick)
     bench_table1_rate_T(quick)
@@ -308,6 +348,13 @@ def main() -> None:
     bench_r_ablation(quick)
     bench_figure2(quick)
     bench_roofline(quick)
+    if json_path:
+        if os.path.dirname(json_path):
+            os.makedirs(os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump([{"name": n, "us_per_call": round(us, 1), "derived": d}
+                       for n, us, d in RESULTS], f, indent=1)
+        print(f"wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

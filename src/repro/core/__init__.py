@@ -1,24 +1,49 @@
 """Core contribution of the paper: time-varying topologies, gossip weight
-matrices, effective diameter, decentralized algorithms (DSGD/DSGT/MC-DSGT)
-and the lower-bound hard instances."""
+matrices, effective diameter, decentralized algorithms (DSGD/DSGT/MC-DSGT/D2)
+and the lower-bound hard instances — plus the structure-aware gossip
+planning layer (GossipPlan) that lowers every topology to its cheapest
+collective."""
 
 from . import algorithms, gossip, lower_bound, topology  # noqa: F401
-from .algorithms import dsgd, dsgt, mc_dsgt, mix, multi_consensus, run, warm_start  # noqa: F401
+from .algorithms import (  # noqa: F401
+    complete_mix,
+    d2,
+    dsgd,
+    dsgt,
+    make_plan_mixer,
+    mc_dsgt,
+    mix,
+    multi_consensus,
+    one_peer_mix,
+    run,
+    sun_mix,
+    warm_start,
+)
 from .gossip import (  # noqa: F401
+    GossipPlan,
+    GossipRound,
     WeightSchedule,
     check_assumption3,
     consensus_contraction,
     laplacian_rule,
     metropolis_weights,
     mixing_beta,
+    plan_round,
     schedule_from_topology,
     theorem3_weight_schedule,
 )
 from .topology import (  # noqa: F401
+    RoundStructure,
+    classify_adjacency,
     effective_diameter,
     effective_distance,
+    erdos_renyi_graph,
+    erdos_renyi_schedule,
     federated_schedule,
     one_peer_exponential_schedule,
+    random_matching_schedule,
+    resampled_matching_schedule,
+    star_graph,
     sun_shaped_graph,
     sun_shaped_schedule,
     theorem3_distance_formula,

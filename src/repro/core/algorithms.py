@@ -22,6 +22,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 GradFn = Callable[[PyTree, jax.Array], PyTree]
@@ -99,16 +100,31 @@ def sun_multi_consensus(center_masks: jax.Array, delta: float, tree: PyTree,
     return out
 
 
-def one_peer_mix(peer: jax.Array, w_peer: float, tree: PyTree) -> PyTree:
+def one_peer_mix(peer: jax.Array, w_peer, tree: PyTree) -> PyTree:
     """Gossip for one-peer (perfect-matching) graphs — one-peer exponential
-    [42], EquiRand/random matching [32, 39]: z_i = (1-w) y_i + w y_{peer(i)}.
+    [42], EquiRand/random matching [32, 39]: z_i = (1-w_i) y_i + w_i y_{peer(i)}.
 
-    ``peer`` is the (n,) matching permutation (an involution).  Under GSPMD
-    the node-axis take lowers to a collective-permute — O(V) point-to-point
+    ``peer`` is the (n,) matching permutation (an involution); ``w_peer`` is
+    a scalar or an (n,) per-node weight vector (symmetric pairs must share a
+    weight for the matrix to stay doubly stochastic).  Under GSPMD the
+    node-axis take lowers to a collective-permute — O(V) point-to-point
     instead of the dense einsum's O(nV) gather (beyond-paper).
     """
     def _m(x):
-        return (1.0 - w_peer) * x + w_peer * jnp.take(x, peer, axis=0)
+        w = jnp.asarray(w_peer, x.dtype)
+        if w.ndim == 1:
+            w = w.reshape((w.shape[0],) + (1,) * (x.ndim - 1))
+        return (1.0 - w) * x + w * jnp.take(x, peer, axis=0)
+    return jax.tree.map(_m, tree)
+
+
+def complete_mix(avg_weight, tree: PyTree) -> PyTree:
+    """Gossip for the complete graph with W = (1-a) I + a 11^T/n:
+    z = (1-a) y + a ȳ.  The node-axis mean is ONE all-reduce of one
+    parameter volume — O(V) on the wire, vs the dense einsum's O(nV)."""
+    def _m(x):
+        a = jnp.asarray(avg_weight, x.dtype)
+        return (1.0 - a) * x + a * jnp.mean(x, axis=0, keepdims=True)
     return jax.tree.map(_m, tree)
 
 
@@ -134,6 +150,108 @@ def one_peer_mix_ppermute(perm: list, w_peer: float, tree: PyTree,
                          out_specs=spec)(x)
 
     return jax.tree.map(_m, tree)
+
+
+# ---------------------------------------------------------------------------
+# Planned gossip: consume a staged GossipPlan inside the jitted step
+# ---------------------------------------------------------------------------
+
+def make_plan_mixer(plan, *, mesh=None, axis: str = "data", mode: str | None = None,
+                    dense_block=None):
+    """Build ``mix_fn(tensors, t0, rounds, tree)`` applying rounds
+    [t0, t0+rounds) of a :class:`repro.core.gossip.GossipPlan`.
+
+    ``tensors`` is ``plan.tensors()`` staged on device **once** (the caller
+    uploads it a single time and passes the same arrays every step — no
+    per-step host transfer); ``t0`` is taken modulo the plan period.
+
+    Two dispatch modes (default: ``plan.dispatch``, forced to ``static``
+    when a mesh enables the ppermute matching path):
+
+    * ``dynamic`` — requires a kind-uniform plan; ``t0`` may be a traced
+      scalar, so ONE compilation serves every phase of the period (the
+      round's parameters are gathered from the staged arrays by index);
+    * ``static``  — ``t0`` must be concrete at trace time (pass it through
+      ``jax.jit(..., static_argnums=...)``); each round dispatches on its
+      statically-known kind, so ``empty`` rounds cost literally nothing and
+      matchings may lower to an explicit ``lax.ppermute`` (``mesh`` given).
+      The enclosing jit then specializes per start phase: a step consuming
+      ``wps`` rounds compiles at most ``period / gcd(wps, period)`` distinct
+      variants (5 for the built-in federated schedule), all within the
+      first period.
+
+    ``dense_block``: optional ``(Ws, tree) -> tree`` used for runs of
+    consecutive dense rounds (e.g. the fused Pallas multi-consensus);
+    defaults to the einsum scan.
+    """
+    P = plan.period
+    kinds = plan.kinds
+    has_matching = any(k == "matching" for k in kinds)
+    if mode is None:
+        mode = ("static" if plan.dispatch == "static"
+                or (mesh is not None and has_matching) else "dynamic")
+    if mode == "dynamic" and len(set(kinds)) != 1:
+        raise ValueError("dynamic plan dispatch requires a kind-uniform plan; "
+                         f"got {sorted(set(kinds))}")
+    _dense_mc = dense_block or (lambda Ws, tr: multi_consensus(Ws, tr))
+
+    def _apply_uniform(kind, tensors, idxs, tree):
+        """Rounds ``idxs`` (all of one kind) as ONE lax.scan whose body is a
+        single round: compile cost is O(1) in the window length (a Python
+        loop of per-round gathers makes XLA's gather chains explode on long
+        windows — one full period jitted at once is the worst case)."""
+        if kind == "empty":
+            return tree
+        if kind == "dense":
+            return _dense_mc(jnp.take(tensors["W"], idxs, axis=0), tree)
+        if kind == "sun":
+            xs = (jnp.take(tensors["center_mask"], idxs, axis=0),
+                  jnp.take(tensors["delta"], idxs, axis=0))
+            body = lambda z, md: (sun_mix(md[0], md[1], z), None)
+        elif kind == "complete":
+            xs = jnp.take(tensors["avg_w"], idxs, axis=0)
+            body = lambda z, a: (complete_mix(a, z), None)
+        else:  # matching
+            xs = (jnp.take(tensors["perm"], idxs, axis=0),
+                  jnp.take(tensors["w_peer"], idxs, axis=0))
+            body = lambda z, pw: (one_peer_mix(pw[0], pw[1], z), None)
+        out, _ = jax.lax.scan(body, tree, xs)
+        return out
+
+    def _apply_static(tensors, t0, rounds, tree):
+        t0 = int(t0)
+        r = 0
+        while r < rounds:  # group consecutive same-kind rounds
+            kind = plan.rounds[(t0 + r) % P].kind
+            stop = r
+            while stop < rounds and plan.rounds[(t0 + stop) % P].kind == kind:
+                stop += 1
+            idx_list = [(t0 + q) % P for q in range(r, stop)]
+            if kind == "matching" and mesh is not None:
+                # explicit point-to-point schedule: perm is static here, so
+                # each round lowers to a collective-permute
+                for idx in idx_list:
+                    rd = plan.rounds[idx]
+                    if np.allclose(rd.w_peer, rd.w_peer[0]):
+                        pairs = [(i, int(p)) for i, p in enumerate(rd.perm)]
+                        tree = one_peer_mix_ppermute(
+                            pairs, float(rd.w_peer[0]), tree, mesh, axis)
+                    else:
+                        tree = one_peer_mix(jnp.asarray(rd.perm),
+                                            jnp.asarray(rd.w_peer), tree)
+            elif kind != "empty":
+                tree = _apply_uniform(kind, tensors, jnp.asarray(idx_list),
+                                      tree)
+            r = stop
+        return tree
+
+    def _apply_dynamic(tensors, t0, rounds, tree):
+        idxs = (t0 + jnp.arange(rounds)) % P
+        return _apply_uniform(kinds[0], tensors, idxs, tree)
+
+    fn = _apply_static if mode == "static" else _apply_dynamic
+    fn.dispatch = mode
+    return fn
 
 
 def node_mean(tree: PyTree) -> PyTree:
@@ -308,7 +426,6 @@ def warm_start(algo: DecentralizedAlgorithm, state: AlgoState,
         return state._replace(g_prev=g0, opt_state=state.x)
     R = algo.weights_per_step // 2
     g0 = _accumulate(grad_fn, state.x, key, R)
-    n = jax.tree.leaves(state.x)[0].shape[0]
     h0 = jax.tree.map(
         lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape), g0)
     return state._replace(h=h0, g_prev=g0)
@@ -324,6 +441,11 @@ def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
         eval_every: int = 1):
     """Host-side training loop over a :class:`repro.core.gossip.WeightSchedule`.
 
+    The schedule is staged on device ONCE up front — one period (or, for
+    aperiodic schedules, the whole run's window) of matrices — and the
+    jitted step gathers its ``weights_per_step`` rounds from the staged
+    stack by index: no per-step host ``stacked()`` + transfer.
+
     Returns (final_state, history) where history records ``eval_fn`` of the
     node-mean model x-bar every ``eval_every`` rounds, keyed by the total
     gossip/oracle budget T = k * weights_per_step consumed so far (the
@@ -332,14 +454,22 @@ def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
     state = algo.init(x0)
     key, k0 = jax.random.split(key)
     state = warm_start(algo, state, grad_fn, k0)
-    step = jax.jit(algo.step, static_argnums=1)
+    wps = algo.weights_per_step
+    total = max(1, num_steps * wps)
+    stack = min(getattr(weight_schedule, "period", None) or total, total)
+    Ws_all = jnp.asarray(weight_schedule.stacked(0, stack))
+
+    def _step(state, Ws_all, t, sub):
+        idx = (t + jnp.arange(wps)) % stack
+        return algo.step(state, grad_fn, jnp.take(Ws_all, idx, axis=0), sub)
+
+    step = jax.jit(_step)
     history = []
     t = 0
     for k in range(num_steps):
-        Ws = jnp.asarray(weight_schedule.stacked(t, algo.weights_per_step))
         key, sub = jax.random.split(key)
-        state = step(state, grad_fn, Ws, sub)
-        t += algo.weights_per_step
+        state = step(state, Ws_all, t % stack, sub)
+        t += wps
         if eval_fn is not None and (k % eval_every == 0 or k == num_steps - 1):
             xbar = jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
             history.append((t, jax.device_get(eval_fn(xbar))))

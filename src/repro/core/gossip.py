@@ -86,14 +86,186 @@ def check_assumption3(W: WeightMatrix, adj: topo.Adjacency | None = None,
 
 
 # ---------------------------------------------------------------------------
+# GossipPlan: per-round structured lowerings (the planning layer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GossipRound:
+    """One round of a :class:`GossipPlan`: the dense matrix plus, when the
+    round is structured, the parameters of its cheap lowering.
+
+    kind → lowering (see :mod:`repro.core.algorithms`):
+
+    * ``empty``     — z = x (no-op; ``perm`` = identity, ``w_peer`` = 0);
+    * ``matching``  — :func:`one_peer_mix`: z_i = (1-w_i) x_i + w_i x_{perm(i)};
+    * ``sun``       — :func:`sun_mix` with W = I - (delta/n) L(S_{n,C});
+    * ``complete``  — :func:`complete_mix`: z = (1-a) x + a x̄;
+    * ``dense``     — generic mix(W, ·) einsum.
+    """
+
+    kind: str
+    W: np.ndarray                              # (n, n) dense reference
+    center_mask: np.ndarray | None = None      # (n,) float32, sun
+    delta: float | None = None                 # sun: W = I - (delta/n) L
+    perm: np.ndarray | None = None             # (n,) int32, matching/empty
+    w_peer: np.ndarray | None = None           # (n,) float32, matching/empty
+    avg_weight: float | None = None            # complete: z = (1-a) x + a x̄
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    def as_dense(self) -> np.ndarray:
+        """Reconstruct the dense matrix implied by the structured lowering
+        (== ``W`` for a valid plan; the planner asserts this)."""
+        n = self.n
+        if self.kind == "empty":
+            return np.eye(n)
+        if self.kind == "complete":
+            a = self.avg_weight
+            return (1.0 - a) * np.eye(n) + a * np.ones((n, n)) / n
+        if self.kind == "matching":
+            W = np.diag(1.0 - self.w_peer.astype(np.float64))
+            W[np.arange(n), self.perm] += self.w_peer
+            return W
+        if self.kind == "sun":
+            adj = topo.sun_shaped_graph(n, np.flatnonzero(self.center_mask))
+            return laplacian_weights(adj, self.delta / n)
+        return np.asarray(self.W, np.float64)
+
+
+def plan_round(W: WeightMatrix,
+               structure: "topo.RoundStructure | None" = None,
+               atol: float = 1e-9) -> GossipRound:
+    """Lower one weight matrix to its cheapest structured form.
+
+    ``structure`` is the topology-level tag when the schedule declares one;
+    otherwise the sparsity pattern of ``W`` is classified.  The structured
+    parameters are extracted from ``W`` and accepted only if they reproduce
+    ``W`` exactly (within ``atol``); any mismatch — e.g. non-uniform weights
+    on a sun graph — falls back to the always-correct dense lowering.
+    """
+    W = np.asarray(W, np.float64)
+    n = W.shape[0]
+    if n == 1:  # single node: any valid W is [[1]] — no communication
+        rd = GossipRound("empty", W, perm=np.zeros(1, np.int32),
+                         w_peer=np.zeros(1, np.float32))
+        return rd if np.allclose(W, 1.0) else GossipRound("dense", W)
+    if structure is None or structure.kind == "dense":
+        adj = np.abs(W) > atol
+        np.fill_diagonal(adj, True)
+        structure = topo.classify_adjacency(adj)
+    eye = np.eye(n)
+
+    def _accept(rd: GossipRound) -> GossipRound | None:
+        return rd if np.allclose(rd.as_dense(), W, atol=1e-8) else None
+
+    rd = None
+    if structure.kind == "empty":
+        rd = _accept(GossipRound(
+            "empty", W, perm=np.arange(n, dtype=np.int32),
+            w_peer=np.zeros(n, np.float32)))
+    elif structure.kind == "complete":
+        a = float(W[~eye.astype(bool)].mean() * n)
+        rd = _accept(GossipRound("complete", W, avg_weight=a))
+    elif structure.kind == "matching":
+        perm = np.asarray(structure.perm, np.int32)
+        w = W[np.arange(n), perm].astype(np.float32)
+        rd = _accept(GossipRound("matching", W, perm=perm, w_peer=w))
+    elif structure.kind == "sun":
+        center = np.asarray(structure.center, int)
+        mask = np.zeros(n, np.float32)
+        mask[center] = 1.0
+        rim = np.setdiff1d(np.arange(n), center)
+        probe = rim[0] if rim.size else 1  # any edge weight; all must agree
+        delta = float(W[probe, center[0]] * n)
+        rd = _accept(GossipRound("sun", W, center_mask=mask, delta=delta))
+    return rd if rd is not None else GossipRound("dense", W)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipPlan:
+    """A window of structured gossip rounds, device-stageable in one shot.
+
+    ``tensors()`` packs every round's lowering parameters into dense
+    ``(period, ...)`` arrays; drivers upload them **once** and the jitted
+    step indexes them by ``t % period`` (see
+    :func:`repro.core.algorithms.make_plan_mixer`) — no per-step host
+    re-stacking or transfer."""
+
+    rounds: tuple  # tuple[GossipRound]
+
+    @property
+    def period(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def n(self) -> int:
+        return self.rounds[0].n
+
+    @property
+    def kinds(self) -> tuple:
+        return tuple(r.kind for r in self.rounds)
+
+    @property
+    def dispatch(self) -> str:
+        """'dynamic' when one lowering serves every round (a single
+        compilation with a traced round index), else 'static' (the step
+        specializes per start phase; empty rounds then cost nothing)."""
+        return "dynamic" if len(set(self.kinds)) == 1 else "static"
+
+    def tensors(self) -> dict:
+        """Device-stageable plan arrays, keyed by lowering family.  Rounds
+        of other kinds hold identity defaults at their index (unused)."""
+        P, n = self.period, self.n
+        kinds = set(self.kinds)
+        out = {}
+        if "dense" in kinds:
+            out["W"] = np.stack([r.W for r in self.rounds]).astype(np.float32)
+        if "sun" in kinds:
+            out["center_mask"] = np.stack(
+                [r.center_mask if r.kind == "sun" else np.zeros(n, np.float32)
+                 for r in self.rounds])
+            out["delta"] = np.asarray(
+                [r.delta if r.kind == "sun" else 0.0 for r in self.rounds],
+                np.float32)
+        if kinds & {"matching", "empty"}:
+            ident = np.arange(n, dtype=np.int32)
+            out["perm"] = np.stack(
+                [r.perm if r.perm is not None else ident
+                 for r in self.rounds])
+            out["w_peer"] = np.stack(
+                [r.w_peer if r.w_peer is not None else np.zeros(n, np.float32)
+                 for r in self.rounds])
+        if "complete" in kinds:
+            out["avg_w"] = np.asarray(
+                [r.avg_weight if r.kind == "complete" else 0.0
+                 for r in self.rounds], np.float32)
+        return out
+
+    def validate(self) -> None:
+        """Assert every structured lowering equals its dense matrix and is a
+        valid gossip matrix (Assumption 3)."""
+        for t, rd in enumerate(self.rounds):
+            rec = rd.as_dense()
+            assert np.allclose(rec, rd.W, atol=1e-8), \
+                f"round {t}: {rd.kind} lowering != dense matrix"
+            check_assumption3(rec)
+
+
+# ---------------------------------------------------------------------------
 # Matrix schedules built from topology schedules
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class WeightSchedule:
-    """A periodic sequence of weight matrices W^t."""
+    """A periodic sequence of weight matrices W^t, optionally annotated with
+    the topology-level :class:`repro.core.topology.RoundStructure` of each
+    round (attached by :func:`schedule_from_topology`; the planner falls
+    back to sparsity classification when absent)."""
 
     matrices: tuple  # tuple[np.ndarray]
+    structures: tuple | None = None  # tuple[RoundStructure] | None
 
     @property
     def n(self) -> int:
@@ -110,20 +282,50 @@ class WeightSchedule:
     def __call__(self, t: int) -> WeightMatrix:
         return self.matrices[t % len(self.matrices)]
 
+    def structure(self, t: int):
+        if self.structures is None:
+            return None
+        return self.structures[t % len(self.structures)]
+
     def stacked(self, t0: int, rounds: int, dtype=np.float32) -> np.ndarray:
-        """(rounds, n, n) array W^{t0}, ..., W^{t0+rounds-1} — the form the
-        jitted distributed step consumes."""
+        """(rounds, n, n) array W^{t0}, ..., W^{t0+rounds-1} — the dense
+        form of the schedule window."""
         return np.stack([self(t0 + r) for r in range(rounds)]).astype(dtype)
 
+    def plan(self, t0: int = 0, rounds: int | None = None,
+             validate: bool = True) -> GossipPlan:
+        """Lower rounds [t0, t0+rounds) (default: one full period) to a
+        :class:`GossipPlan`; with ``validate`` each structured lowering is
+        checked against its dense matrix via :func:`check_assumption3` and
+        exact reconstruction."""
+        rounds = self.period if rounds is None else rounds
+        plan = GossipPlan(tuple(
+            plan_round(self(t0 + r), self.structure(t0 + r))
+            for r in range(rounds)))
+        if validate:
+            plan.validate()
+        return plan
 
-def schedule_from_topology(schedule, rule: str = "metropolis") -> WeightSchedule:
-    """Build a weight schedule from a (periodic) topology schedule.
+
+def schedule_from_topology(schedule, rule: str = "metropolis",
+                           horizon: int | None = None) -> WeightSchedule:
+    """Build a weight schedule from a topology schedule.
 
     Default rule is Metropolis-Hastings: unlike I - L/d_max it stays a
     strict average on degree-1 graphs (matchings), where the Laplacian rule
-    degenerates to a pure swap with no contraction."""
+    degenerates to a pure swap with no contraction.
+
+    Periodic schedules materialize one period; non-periodic ones (``period
+    is None``, e.g. :func:`repro.core.topology.resampled_matching_schedule`)
+    require ``horizon`` — the number of rounds the run will consume — and
+    materialize exactly that window."""
     period = getattr(schedule, "period", 1)
-    mats = []
+    if period is None:
+        if horizon is None:
+            raise ValueError(
+                "non-periodic topology schedule requires horizon=<rounds>")
+        period = horizon
+    mats, structs = [], []
     for t in range(period):
         adj = schedule(t)
         if rule == "laplacian_dmax":
@@ -133,7 +335,9 @@ def schedule_from_topology(schedule, rule: str = "metropolis") -> WeightSchedule
         else:
             raise ValueError(f"unknown rule {rule!r}")
         mats.append(W)
-    return WeightSchedule(tuple(mats))
+        structs.append(schedule.structure(t) if hasattr(schedule, "structure")
+                       else topo.classify_adjacency(adj))
+    return WeightSchedule(tuple(mats), tuple(structs))
 
 
 def theorem3_weight_schedule(n: int, beta: float, avoid: Sequence[int] = ()) -> WeightSchedule:
@@ -143,12 +347,13 @@ def theorem3_weight_schedule(n: int, beta: float, avoid: Sequence[int] = ()) -> 
     k = int(math.ceil(n * (1.0 - beta)))
     if k >= n:
         W = beta * np.eye(n) + (1.0 - beta) * np.ones((n, n)) / n
-        return WeightSchedule((W,))
+        return WeightSchedule((W,), (topo.RoundStructure("complete"),))
     delta = n * (1.0 - beta) / k
     mats = tuple(
         laplacian_weights(graphs(t), delta / n) for t in range(graphs.period)
     )
-    return WeightSchedule(mats)
+    structs = tuple(graphs.structure(t) for t in range(graphs.period))
+    return WeightSchedule(mats, structs)
 
 
 # ---------------------------------------------------------------------------

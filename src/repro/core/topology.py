@@ -90,6 +90,60 @@ def sun_shaped_graph(n: int, center_set: Sequence[int]) -> Adjacency:
 
 
 # ---------------------------------------------------------------------------
+# Per-round structure descriptors (gossip-planning layer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundStructure:
+    """What a single round's graph *is*, beyond its adjacency matrix.
+
+    The gossip planner (:meth:`repro.core.gossip.WeightSchedule.plan`) uses
+    these tags to lower each round to its cheapest collective:
+
+    * ``empty``     — self-loops only: no communication at all;
+    * ``complete``  — K_n: one all-reduce of the node mean;
+    * ``matching``  — perfect matching (``perm`` is the peer involution):
+                      one point-to-point exchange, O(V) on the wire;
+    * ``sun``       — S_{n,C} (``center`` is C): two node-axis all-reduces,
+                      O(2V) on the wire;
+    * ``dense``     — anything else: the generic einsum / all-gather path.
+    """
+
+    kind: str                                  # dense|sun|matching|complete|empty
+    center: tuple | None = None                # sun: sorted center set C
+    perm: tuple | None = None                  # matching: peer involution
+
+
+def classify_adjacency(adj: Adjacency) -> RoundStructure:
+    """Classify one adjacency matrix into a :class:`RoundStructure`.
+
+    Recognition is exact (no tolerance): directed or otherwise unstructured
+    graphs fall through to ``dense``, which is always a valid lowering.
+    """
+    n = adj.shape[0]
+    if not np.array_equal(adj, adj.T):
+        return RoundStructure("dense")
+    off = adj & ~np.eye(n, dtype=bool)
+    deg = off.sum(axis=1)
+    if not deg.any():
+        return RoundStructure("empty")
+    if (deg == n - 1).all():
+        return RoundStructure("complete")
+    if (deg == 1).all():
+        perm = off.argmax(axis=1)
+        if np.array_equal(perm[perm], np.arange(n)):
+            return RoundStructure("matching", perm=tuple(int(p) for p in perm))
+    center = np.flatnonzero(deg == n - 1)
+    if center.size:
+        want = np.zeros(n, dtype=bool)
+        want[center] = True
+        rim = np.setdiff1d(np.arange(n), center)
+        if all(np.array_equal(off[i], want & (np.arange(n) != i)) for i in rim):
+            return RoundStructure("sun", center=tuple(int(c) for c in center))
+    return RoundStructure("dense")
+
+
+# ---------------------------------------------------------------------------
 # Time-varying schedules
 # ---------------------------------------------------------------------------
 
@@ -110,6 +164,9 @@ class StaticSchedule:
     def __call__(self, t: int) -> Adjacency:
         return self.adjacency
 
+    def structure(self, t: int) -> RoundStructure:
+        return classify_adjacency(self.adjacency)
+
 
 @dataclasses.dataclass(frozen=True)
 class PeriodicSchedule:
@@ -127,6 +184,9 @@ class PeriodicSchedule:
 
     def __call__(self, t: int) -> Adjacency:
         return self.graphs[t % len(self.graphs)]
+
+    def structure(self, t: int) -> RoundStructure:
+        return classify_adjacency(self(t))
 
 
 def one_peer_exponential_schedule(n: int) -> PeriodicSchedule:
@@ -154,14 +214,60 @@ def random_matching_schedule(n: int, period: int = 16, seed: int = 0) -> Periodi
     if n % 2:
         raise ValueError("random matching requires even n")
     rng = np.random.default_rng(seed)
-    graphs = []
-    for _ in range(period):
-        perm = rng.permutation(n)
-        adj = _empty(n)
-        for a, b in zip(perm[0::2], perm[1::2]):
-            adj[a, b] = adj[b, a] = True
-        graphs.append(adj)
-    return PeriodicSchedule(tuple(graphs))
+    return PeriodicSchedule(tuple(_random_matching(n, rng)
+                                  for _ in range(period)))
+
+
+def _random_matching(n: int, rng: np.random.Generator) -> Adjacency:
+    perm = rng.permutation(n)
+    adj = _empty(n)
+    for a, b in zip(perm[0::2], perm[1::2]):
+        adj[a, b] = adj[b, a] = True
+    return adj
+
+
+def erdos_renyi_schedule(n: int, p: float = 0.5, period: int = 8,
+                         seed: int = 0) -> PeriodicSchedule:
+    """Time-varying Erdős–Rényi graphs: each of the ``period`` rounds is an
+    independent G(n, p) draw (plus self-loops).  Unstructured by design —
+    the gossip planner lowers every round to the dense path — so it serves
+    as the generic-topology scenario surface and the planner's control
+    case."""
+    rng = np.random.default_rng(seed)
+    graphs = tuple(
+        erdos_renyi_graph(n, p, seed=int(rng.integers(2 ** 31)))
+        for _ in range(period))
+    return PeriodicSchedule(graphs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResampledMatchingSchedule:
+    """Non-periodic random-matching schedule: round t activates a fresh
+    uniformly random perfect matching drawn from a seed stream keyed by
+    ``(seed, t)`` — no round is ever reused, unlike the periodic
+    :func:`random_matching_schedule`.
+
+    ``period`` is ``None``: consumers that need a finite window (the gossip
+    planner, :func:`repro.core.gossip.schedule_from_topology`) materialize a
+    ``horizon`` of rounds instead."""
+
+    n: int
+    seed: int = 0
+
+    period = None  # non-periodic: every round is a fresh draw
+
+    def __call__(self, t: int) -> Adjacency:
+        rng = np.random.default_rng(np.random.SeedSequence((self.seed, t)))
+        return _random_matching(self.n, rng)
+
+    def structure(self, t: int) -> RoundStructure:
+        return classify_adjacency(self(t))
+
+
+def resampled_matching_schedule(n: int, seed: int = 0) -> ResampledMatchingSchedule:
+    if n % 2:
+        raise ValueError("random matching requires even n")
+    return ResampledMatchingSchedule(n, seed)
 
 
 def federated_schedule(n: int, local_steps: int) -> PeriodicSchedule:

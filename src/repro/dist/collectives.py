@@ -82,6 +82,14 @@ def tree_cast(tree: PyTree, dtype: Optional[jnp.dtype]) -> PyTree:
     return jax.tree.map(lambda x: x.astype(dtype), tree)
 
 
+def stage_plan(plan) -> dict:
+    """Upload a :class:`repro.core.gossip.GossipPlan`'s tensors to device
+    ONCE.  The returned dict is passed unchanged to every jitted step, which
+    indexes it by ``t % period`` — the whole schedule crosses the host
+    boundary a single time for the lifetime of the run."""
+    return jax.tree.map(jnp.asarray, plan.tensors())
+
+
 # ---------------------------------------------------------------------------
 # Stacked-pytree <-> (n, D) matrix
 # ---------------------------------------------------------------------------

@@ -14,9 +14,12 @@
 
 The gossip mixing runs through :func:`repro.core.algorithms.multi_consensus`
 (an einsum over the node axis — under GSPMD with the node axis sharded this
-lowers to cross-node collectives), through the structured sun rewrite, or
+lowers to cross-node collectives), through the structured sun rewrite,
 through the fused Pallas kernel (``gossip_impl="pallas"``) which applies all
-R rounds in one VMEM-resident pass.
+R rounds in one VMEM-resident pass, or — ``gossip_impl="auto"`` — through a
+:class:`repro.core.gossip.GossipPlan` that dispatches every round to its
+cheapest lowering (sun / one-peer matching / complete-graph mean / dense)
+from plan tensors staged on device once.
 
 Tracker state (h, g_prev) can be held in a lower precision via ``aux_dtype``
 (H2: bf16 trackers halve the steady-state HBM of the tracker copies);
@@ -56,20 +59,39 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
                     R: int = 1, aux_dtype=None, gossip_impl: str = "dense",
                     sun_delta: Optional[float] = None, local_opt=None,
                     clip: Optional[float] = 1.0, unroll: bool = False,
-                    pallas_block_d: int = 1024, pallas_interpret: bool = True):
+                    pallas_block_d: int = 1024, pallas_interpret: bool = True,
+                    plan=None, mesh=None, gossip_axis: str = "data",
+                    auto_dense: str = "einsum"):
     """Build (init_state, warm_start, step) for one decentralized algorithm.
 
     gossip_impl: 'dense' (einsum multi-consensus), 'sun' (structured
     sun-graph rewrite; ``weights`` becomes (2R, n) center masks and
-    ``sun_delta`` must be given), or 'pallas' (fused gossip_mix kernel;
-    ``pallas_interpret=True`` is the CPU fallback).
+    ``sun_delta`` must be given), 'pallas' (fused gossip_mix kernel;
+    ``pallas_interpret=True`` is the CPU fallback), or 'auto' (per-round
+    structured dispatch from a :class:`repro.core.gossip.GossipPlan`;
+    ``plan`` must be given).
+
+    For 'dense'/'sun'/'pallas' the step is ``step(state, batch, weights)``
+    with ``weights`` the per-step gossip stack.  For 'auto' it is
+    ``step(state, batch, plan_tensors, t)``: ``plan_tensors`` is
+    ``plan.tensors()`` staged on device ONCE, ``t`` the start round modulo
+    the plan period — a Python int when ``step.gossip_dispatch == 'static'``
+    (jit it with ``static_argnums=3``), a traced scalar otherwise.
+    ``mesh``/``gossip_axis`` enable the explicit ppermute matching lowering;
+    ``auto_dense='pallas'`` routes runs of dense rounds through the fused
+    Pallas kernel instead of the einsum scan.
     """
-    if algo not in ("mc_dsgt", "dsgt", "dsgd"):
+    if algo not in ("mc_dsgt", "dsgt", "dsgd", "d2"):
         raise ValueError(f"unknown algo {algo!r}")
-    if gossip_impl not in ("dense", "sun", "pallas"):
+    if gossip_impl not in ("dense", "sun", "pallas", "auto"):
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}")
     if gossip_impl == "sun" and sun_delta is None:
         raise ValueError("gossip_impl='sun' requires sun_delta")
+    if gossip_impl == "auto" and plan is None:
+        raise ValueError("gossip_impl='auto' requires plan=GossipPlan")
+    if algo == "d2" and local_opt is not None:
+        raise ValueError("algo='d2' does not support local_opt (the x^{k-1} "
+                         "difference update has no local-optimizer hook)")
 
     def _mc(Ws, tree):
         if gossip_impl == "sun":
@@ -78,6 +100,21 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
             return coll.fused_multi_consensus(
                 Ws, tree, block_d=pallas_block_d, interpret=pallas_interpret)
         return alg.multi_consensus(Ws, tree, unroll=unroll)
+
+    if gossip_impl == "auto":
+        dense_block = None
+        if auto_dense == "pallas":
+            dense_block = lambda Ws, tr: coll.fused_multi_consensus(
+                Ws, tr, block_d=pallas_block_d, interpret=pallas_interpret)
+        _plan_mix = alg.make_plan_mixer(plan, mesh=mesh, axis=gossip_axis,
+                                        dense_block=dense_block)
+
+    def _mix_rounds(gossip, t, offset, rounds, tree):
+        """Rounds [t+offset, t+offset+rounds) — from the staged plan under
+        'auto', else the per-step ``weights`` stack slice."""
+        if gossip_impl == "auto":
+            return _plan_mix(gossip, t + offset, rounds, tree)
+        return _mc(gossip[offset:offset + rounds], tree)
 
     def _clip(g):
         if clip is None:
@@ -129,6 +166,12 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
     def warm_start(state: TrainState, batch) -> TrainState:
         if algo == "dsgd":
             return state
+        if algo == "d2":
+            # first step reduces to DSGD: x^{-1} = x^0 (held in the h slot),
+            # g^{-1} = 0 — matching repro.core.algorithms.warm_start
+            zeros = jax.tree.map(jnp.zeros_like, state.x)
+            return state._replace(h=state.x,
+                                  g_prev=coll.tree_cast(zeros, aux_dtype))
         _, g0 = _grads(state.x, batch)
         h0 = jax.tree.map(
             lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True),
@@ -136,31 +179,49 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
         return state._replace(h=coll.tree_cast(h0, aux_dtype),
                               g_prev=coll.tree_cast(g0, aux_dtype))
 
-    def dsgd_step(state: TrainState, batch, weights):
+    def dsgd_core(state: TrainState, batch, gossip, t):
         loss, g = _grads(state.x, batch)
         if local_opt is not None:
             upd, opt = local_opt.update(g, state.opt)
         else:
             upd, opt = g, state.opt
-        x = _mc(weights[:R], alg._axpy(-gamma, upd, state.x))
+        x = _mix_rounds(gossip, t, 0, R, alg._axpy(-gamma, upd, state.x))
         return state._replace(x=x, step=state.step + 1, opt=opt), {"loss": loss}
 
-    def tracker_step(state: TrainState, batch, weights):
-        Wx, Wh = weights[:R], weights[R:2 * R]
+    def tracker_core(state: TrainState, batch, gossip, t):
         if local_opt is not None:
             d, opt = local_opt.update(state.h, state.opt)
         else:
             d, opt = state.h, state.opt
-        x = _mc(Wx, alg._axpy(-gamma, d, state.x))
+        x = _mix_rounds(gossip, t, 0, R, alg._axpy(-gamma, d, state.x))
         loss, g = _grads(x, batch)
         delta = jax.tree.map(
             lambda h, gi, gp: h.astype(gi.dtype) + gi - gp.astype(gi.dtype),
             state.h, g, state.g_prev)
-        h = coll.tree_cast(_mc(Wh, delta), aux_dtype)
+        h = coll.tree_cast(_mix_rounds(gossip, t, R, R, delta), aux_dtype)
         return TrainState(x=x, h=h, g_prev=coll.tree_cast(g, aux_dtype),
                           step=state.step + 1, opt=opt), {"loss": loss}
 
-    step = dsgd_step if algo == "dsgd" else tracker_step
+    def d2_core(state: TrainState, batch, gossip, t):
+        # D^2 [35]: x^{k+1} = W(2 x^k - x^{k-1} - gamma (g^k - g^{k-1}));
+        # x^{k-1} rides in the tracker (h) slot, uncast to keep the
+        # difference update exact.  Consumes ONE gossip round per step.
+        loss, g = _grads(state.x, batch)
+        z = jax.tree.map(
+            lambda xk, xm, gk, gp: 2.0 * xk - xm.astype(xk.dtype)
+            - gamma * (gk - gp.astype(gk.dtype)),
+            state.x, state.h, g, state.g_prev)
+        x = _mix_rounds(gossip, t, 0, 1, z)
+        return TrainState(x=x, h=state.x, g_prev=coll.tree_cast(g, aux_dtype),
+                          step=state.step + 1, opt=state.opt), {"loss": loss}
+
+    core = {"dsgd": dsgd_core, "d2": d2_core}.get(algo, tracker_core)
+    if gossip_impl == "auto":
+        step = core
+        step.gossip_dispatch = _plan_mix.dispatch
+    else:
+        def step(state: TrainState, batch, weights):
+            return core(state, batch, weights, 0)
     return init_state, jax.jit(warm_start), step
 
 

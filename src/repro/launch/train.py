@@ -24,11 +24,18 @@ from repro import configs
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core import gossip, topology as topo
 from repro.data import token_stream_for
-from repro.dist import steps as dsteps
+from repro.dist import collectives as dcoll, steps as dsteps
 from repro.models import build
 
 
-def make_weight_schedule(kind: str, n: int, beta: float) -> gossip.WeightSchedule:
+def make_weight_schedule(kind: str, n: int, beta: float, *,
+                         horizon: int | None = None, seed: int = 0,
+                         er_p: float = 0.5) -> gossip.WeightSchedule:
+    """Build the weight schedule for one named topology scenario.
+
+    ``horizon`` (total gossip rounds the run will consume) is required only
+    by the non-periodic ``resampled-matching`` schedule; ``er_p`` is the
+    Erdős–Rényi edge probability."""
     if kind == "sun":
         return gossip.theorem3_weight_schedule(n, beta)
     if kind == "one-peer-exp":
@@ -42,9 +49,19 @@ def make_weight_schedule(kind: str, n: int, beta: float) -> gossip.WeightSchedul
         return gossip.schedule_from_topology(topo.federated_schedule(n, 4))
     if kind == "random-matching":
         return gossip.schedule_from_topology(topo.random_matching_schedule(n))
+    if kind == "resampled-matching":
+        return gossip.schedule_from_topology(
+            topo.resampled_matching_schedule(n, seed=seed), horizon=horizon)
+    if kind == "erdos-renyi":
+        return gossip.schedule_from_topology(
+            topo.erdos_renyi_schedule(n, er_p, seed=seed))
     if kind == "complete":
         return gossip.WeightSchedule((np.ones((n, n)) / n,))
     raise ValueError(kind)
+
+TOPOLOGIES = ["sun", "ring", "one-peer-exp", "static-exp", "federated",
+              "complete", "random-matching", "resampled-matching",
+              "erdos-renyi"]
 
 
 def consensus_error(x) -> float:
@@ -62,16 +79,18 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--beta", type=float, default=0.75)
-    ap.add_argument("--topology", default="sun",
-                    choices=["sun", "ring", "one-peer-exp", "static-exp",
-                             "federated", "complete", "random-matching"])
+    ap.add_argument("--topology", default="sun", choices=TOPOLOGIES)
     ap.add_argument("--algo", default="mc_dsgt",
-                    choices=["mc_dsgt", "dsgt", "dsgd"])
+                    choices=["mc_dsgt", "dsgt", "dsgd", "d2"])
     ap.add_argument("--gossip-impl", default="dense",
-                    choices=["dense", "pallas"],
-                    help="multi-consensus path: GSPMD einsum (dense) or the "
+                    choices=["dense", "pallas", "auto"],
+                    help="multi-consensus path: GSPMD einsum (dense), the "
                          "fused Pallas gossip_mix kernel (interpret-mode "
-                         "fallback on CPU)")
+                         "fallback on CPU), or per-round structured dispatch "
+                         "from the gossip plan (auto: sun / matching / "
+                         "complete lowerings, dense fallback)")
+    ap.add_argument("--er-p", type=float, default=0.5,
+                    help="edge probability for --topology erdos-renyi")
     ap.add_argument("--R", type=int, default=2)
     ap.add_argument("--gamma", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=2)
@@ -91,13 +110,22 @@ def main(argv=None):
     model = build(cfg)
     n = args.nodes
     R = args.R if args.algo == "mc_dsgt" else 1
+    # gossip rounds one step consumes — and exactly how many we stage/stack
+    # per step, so the consumed window matches the budget accounting
+    wps = {"dsgd": R, "d2": 1}.get(args.algo, 2 * R)
 
-    sched = make_weight_schedule(args.topology, n, args.beta)
+    # horizon only matters for the non-periodic resampled-matching schedule;
+    # the x4 cushion covers --restore continuations (wrap past it is benign)
+    horizon = (args.steps + 1) * wps * 4
+    sched = make_weight_schedule(args.topology, n, args.beta,
+                                 horizon=horizon, seed=args.seed,
+                                 er_p=args.er_p)
     stream = token_stream_for(cfg, n, R, args.batch, args.seq, seed=args.seed,
                               active_vocab=args.active_vocab)
+    plan = sched.plan(0, sched.period) if args.gossip_impl == "auto" else None
     init_state, warm_start, train_step = dsteps.make_train_step(
         model, cfg, algo=args.algo, gamma=args.gamma, R=R,
-        gossip_impl=args.gossip_impl,
+        gossip_impl=args.gossip_impl, plan=plan,
         pallas_interpret=jax.default_backend() != "tpu")
 
     state = init_state(jax.random.key(args.seed), n, jnp.float32)
@@ -107,16 +135,30 @@ def main(argv=None):
         print(f"restored step {start_step} from {args.restore}")
     else:
         state = warm_start(state, stream.batch_at(0))
-    step_fn = jax.jit(train_step)
 
-    wps = 2 * R if args.algo != "dsgd" else R
+    # Stage the whole period's gossip tensors on device ONCE; the jitted
+    # step indexes them by (t mod period) — no per-step stacked()/transfer.
+    period = sched.period
+    if args.gossip_impl == "auto":
+        gossip_dev = dcoll.stage_plan(plan)
+        static_t = train_step.gossip_dispatch == "static"
+        step_fn = (jax.jit(train_step, static_argnums=3) if static_t
+                   else jax.jit(train_step))
+    else:
+        gossip_dev = jnp.asarray(sched.stacked(0, period))
+
+        def _gathered_step(state, batch, Ws_all, t):
+            idx = (t + jnp.arange(wps)) % period
+            return train_step(state, batch, jnp.take(Ws_all, idx, axis=0))
+
+        step_fn = jax.jit(_gathered_step)
+
     t = start_step * wps
     history = []
     for k in range(start_step, start_step + args.steps):
         batch = stream.batch_at(k + 1)
-        weights = jnp.asarray(sched.stacked(t, 2 * R))
         t0 = time.time()
-        state, metrics = step_fn(state, batch, weights)
+        state, metrics = step_fn(state, batch, gossip_dev, t % period)
         loss = float(metrics["loss"])
         dt = time.time() - t0
         t += wps

@@ -144,13 +144,17 @@ def test_gradient_accumulation_variance_reduction():
 
 def test_time_varying_schedule_consumed_in_order():
     """MC-DSGT consumes rounds [2kR, (2k+1)R) for x and [(2k+1)R, (2k+2)R)
-    for h — check the driver hands matrices over in schedule order."""
+    for h.  The driver stages the schedule ONCE (no per-step re-stacking)
+    and gathers each step's window by index — the final state must equal a
+    manual loop handing the stacked windows over in schedule order."""
     n, d, R = 6, 2, 2
+    steps = 3
     seen = []
 
     class RecordingSchedule:
         def __init__(self, inner):
             self.inner = inner
+            self.period = inner.period
         def stacked(self, t0, rounds, dtype=np.float32):
             seen.append((t0, rounds))
             return self.inner.stacked(t0, rounds, dtype)
@@ -158,9 +162,22 @@ def test_time_varying_schedule_consumed_in_order():
     sched = gossip.theorem3_weight_schedule(n, 0.5)
     rec = RecordingSchedule(sched)
     centers, grad_fn, _, _ = quadratic_problem(n, d)
-    alg.run(alg.mc_dsgt(0.1, R=R), jnp.zeros((n, d)), grad_fn, rec, 3,
-            jax.random.key(0))
-    assert seen == [(0, 4), (4, 4), (8, 4)]
+    algo = alg.mc_dsgt(0.1, R=R)
+    state, _ = alg.run(algo, jnp.zeros((n, d)), grad_fn, rec, steps,
+                       jax.random.key(0))
+    # staged exactly once, one period (or the whole run if shorter)
+    assert seen == [(0, min(sched.period, steps * 4))]
+
+    # reference: hand the (2kR, 4)-windows over step by step
+    key = jax.random.key(0)
+    key, k0 = jax.random.split(key)
+    ref = alg.warm_start(algo, algo.init(jnp.zeros((n, d))), grad_fn, k0)
+    for k in range(steps):
+        key, sub = jax.random.split(key)
+        ref = algo.step(ref, grad_fn, jnp.asarray(sched.stacked(4 * k, 4)),
+                        sub)
+    np.testing.assert_allclose(np.asarray(state.x), np.asarray(ref.x),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_d2_removes_heterogeneity_bias():

@@ -1,0 +1,234 @@
+"""Structure-aware gossip planning tests: every lowering the planner can
+pick (sun / matching / complete / empty / dense) must agree with the dense
+``mix(W, ·)`` path, and the auto dispatcher must actually pick the cheap
+lowering on the structured schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import algorithms as alg, gossip, topology as topo
+from repro.launch.train import make_weight_schedule
+
+PLANNABLE = ["sun", "ring", "one-peer-exp", "static-exp", "federated",
+             "complete", "random-matching", "resampled-matching",
+             "erdos-renyi"]
+
+# the acceptance map: what the planner must select per schedule family
+EXPECTED_KINDS = {
+    "sun": {"sun"},
+    "one-peer-exp": {"matching"},
+    "federated": {"empty", "complete"},
+    "complete": {"complete"},
+    "random-matching": {"matching"},
+    "resampled-matching": {"matching"},
+    "ring": {"dense"},
+    "static-exp": {"dense"},
+}
+
+
+def _sched(kind, n=8, beta=0.75):
+    return make_weight_schedule(kind, n, beta, horizon=12, seed=0)
+
+
+def _tree(n, seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (n, 5)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(k, 1), (n, 3, 2))}}
+
+
+def _max_err(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("kind", sorted(EXPECTED_KINDS))
+def test_auto_planner_selects_structured_lowering(kind):
+    plan = _sched(kind).plan()
+    assert set(plan.kinds) == EXPECTED_KINDS[kind], plan.kinds
+
+
+def test_plan_validates_structured_equals_dense():
+    for kind in PLANNABLE:
+        sched = _sched(kind)
+        plan = sched.plan(validate=True)  # raises on any lowering mismatch
+        for t, rd in enumerate(plan.rounds):
+            np.testing.assert_allclose(rd.as_dense(), sched(t), atol=1e-8)
+
+
+@pytest.mark.parametrize("kind", PLANNABLE)
+def test_planned_multi_consensus_matches_dense(kind):
+    """Full-period planned mixing == dense multi_consensus, both dispatch
+    modes, on every schedule make_weight_schedule can produce."""
+    sched = _sched(kind)
+    plan = sched.plan()
+    P = plan.period
+    tree = _tree(sched.n)
+    want = alg.multi_consensus(jnp.asarray(sched.stacked(0, P)), tree)
+    tensors = jax.tree.map(jnp.asarray, plan.tensors())
+
+    static_mix = alg.make_plan_mixer(plan, mode="static")
+    assert _max_err(want, static_mix(tensors, 0, P, tree)) < 1e-5
+    # offset start phase: rounds [1, 1+P) wrap the period
+    want_off = alg.multi_consensus(jnp.asarray(sched.stacked(1, P)), tree)
+    assert _max_err(want_off, static_mix(tensors, 1, P, tree)) < 1e-5
+
+    if plan.dispatch == "dynamic":
+        dyn_mix = alg.make_plan_mixer(plan)
+        assert dyn_mix.dispatch == "dynamic"
+        f = jax.jit(lambda T, t, tr: dyn_mix(T, t, P, tr))
+        assert _max_err(want, f(tensors, jnp.int32(0), tree)) < 1e-5
+        assert _max_err(want_off, f(tensors, jnp.int32(1), tree)) < 1e-5
+
+
+def test_dynamic_dispatch_rejects_mixed_plans():
+    plan = _sched("federated").plan()
+    assert plan.dispatch == "static"
+    with pytest.raises(ValueError):
+        alg.make_plan_mixer(plan, mode="dynamic")
+
+
+def test_structured_primitives_match_dense_mix():
+    """sun_mix / one_peer_mix / complete_mix == mix(W, ·) on their exact
+    weight matrices (the lowering identities the planner relies on)."""
+    n = 8
+    tree = _tree(n)
+    # sun: Theorem 3 matrix
+    ws = gossip.theorem3_weight_schedule(n, 0.6)
+    rd = ws.plan().rounds[0]
+    got = alg.sun_mix(jnp.asarray(rd.center_mask), rd.delta, tree)
+    assert _max_err(alg.mix(jnp.asarray(ws(0), jnp.float32), tree), got) < 1e-5
+    # matching: Metropolis on a one-peer graph (w = 1/2 each)
+    wm = gossip.schedule_from_topology(topo.one_peer_exponential_schedule(n))
+    rdm = wm.plan().rounds[0]
+    got = alg.one_peer_mix(jnp.asarray(rdm.perm), jnp.asarray(rdm.w_peer), tree)
+    assert _max_err(alg.mix(jnp.asarray(wm(0), jnp.float32), tree), got) < 1e-5
+    # complete: W = (1-a) I + a 11^T/n
+    W = 0.3 * np.eye(n) + 0.7 * np.ones((n, n)) / n
+    rdc = gossip.plan_round(W)
+    assert rdc.kind == "complete"
+    got = alg.complete_mix(rdc.avg_weight, tree)
+    assert _max_err(alg.mix(jnp.asarray(W, jnp.float32), tree), got) < 1e-5
+
+
+def test_plan_round_falls_back_to_dense_on_nonuniform_weights():
+    """A sun-shaped sparsity pattern with non-uniform edge weights is NOT
+    the Laplacian form sun_mix computes — the planner must go dense."""
+    n = 6
+    adj = topo.sun_shaped_graph(n, [0, 1])
+    W = gossip.metropolis_weights(adj)
+    W2 = W.copy()
+    # symmetric cycle perturbation over sun edges 0-2, 2-1, 1-3, 3-0: row
+    # and column sums stay 1, sparsity stays sun, uniformity breaks
+    eps = 0.01
+    for i, j, s in [(0, 2, +eps), (2, 1, -eps), (1, 3, +eps), (3, 0, -eps)]:
+        W2[i, j] += s
+        W2[j, i] += s
+    gossip.check_assumption3(W2, adj)
+    assert gossip.plan_round(W2).kind == "dense"
+    assert gossip.plan_round(W).kind == "sun"
+
+
+def test_resampled_matching_is_nonperiodic_and_seed_streamed():
+    sch = topo.resampled_matching_schedule(12, seed=7)
+    assert sch.period is None
+    assert np.array_equal(sch(5), sch(5))          # deterministic in t
+    adjs = [sch(t) for t in range(8)]
+    assert any(not np.array_equal(adjs[0], a) for a in adjs[1:])
+    ws = gossip.schedule_from_topology(sch, horizon=8)
+    assert ws.period == 8
+    assert set(ws.plan().kinds) == {"matching"}
+    with pytest.raises(ValueError):
+        gossip.schedule_from_topology(sch)         # horizon required
+
+
+def test_erdos_renyi_schedule_varies_and_mixes():
+    sch = topo.erdos_renyi_schedule(12, 0.5, period=6, seed=1)
+    assert sch.period == 6
+    assert any(not np.array_equal(sch(0), sch(t)) for t in range(1, 6))
+    ws = gossip.schedule_from_topology(sch)
+    for t in range(ws.period):
+        gossip.check_assumption3(ws(t), sch(t))
+    assert gossip.consensus_contraction(ws, ws.period) < 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(PLANNABLE), n_pow=st.integers(2, 4),
+       seed=st.integers(0, 50))
+def test_property_planned_equals_dense_any_schedule(kind, n_pow, seed):
+    """Property: for any schedule family x (power-of-two) size x seed, one
+    planned period == the dense matrix product applied to random state."""
+    n = 2 ** n_pow
+    sched = make_weight_schedule(kind, n, 0.75, horizon=10, seed=seed)
+    plan = sched.plan()
+    tree = _tree(n, seed)
+    want = alg.multi_consensus(jnp.asarray(sched.stacked(0, plan.period)), tree)
+    mixer = alg.make_plan_mixer(plan, mode="static")
+    got = mixer(jax.tree.map(jnp.asarray, plan.tensors()), 0, plan.period, tree)
+    assert _max_err(want, got) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the auto dispatcher through the training driver
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", ["sun", "federated", "one-peer-exp"])
+def test_train_driver_auto_matches_dense_losses(topology):
+    """Acceptance: step-for-step losses of --gossip-impl auto == dense on a
+    2-step reduced run (same seed, same schedule)."""
+    from repro.launch.train import main as train_main
+    base = ["--arch", "qwen1.5-0.5b", "--preset", "reduced", "--steps", "2",
+            "--nodes", "4", "--batch", "1", "--seq", "16",
+            "--topology", topology]
+    dense = train_main(base + ["--gossip-impl", "dense"])
+    auto = train_main(base + ["--gossip-impl", "auto"])
+    assert len(dense) == len(auto) == 2
+    for hd, ha in zip(dense, auto):
+        np.testing.assert_allclose(hd["loss"], ha["loss"], rtol=2e-4,
+                                   atol=1e-5)
+        np.testing.assert_allclose(hd["consensus"], ha["consensus"],
+                                   atol=1e-3)
+
+
+def test_train_driver_d2_end_to_end():
+    """D^2 is runnable through the CLI (extra Table-1-family baseline)."""
+    from repro.launch.train import main as train_main
+    hist = train_main(["--arch", "qwen1.5-0.5b", "--preset", "reduced",
+                       "--steps", "3", "--nodes", "4", "--algo", "d2",
+                       "--gamma", "0.05", "--batch", "1", "--seq", "16",
+                       "--topology", "sun", "--gossip-impl", "auto"])
+    assert len(hist) == 3
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_dist_steps_d2_matches_core_reference():
+    """dist.steps d2 (clip disabled) tracks the core reference update on a
+    tiny quadratic-like model state: one step reduces to DSGD."""
+    from repro import configs
+    from repro.dist import steps as dsteps
+    from repro.models import build
+    from repro.data import token_stream_for
+
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    model = build(cfg)
+    n = 4
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    stream = token_stream_for(cfg, n, 1, 2, 16, seed=0)
+    gamma = 0.05
+    init_d2, warm_d2, step_d2 = dsteps.make_train_step(
+        model, cfg, algo="d2", gamma=gamma, R=1, clip=None)
+    init_sg, warm_sg, step_sg = dsteps.make_train_step(
+        model, cfg, algo="dsgd", gamma=gamma, R=1, clip=None)
+    s_d2 = warm_d2(init_d2(jax.random.key(0), n, jnp.float32),
+                   stream.batch_at(0))
+    s_sg = init_sg(jax.random.key(0), n, jnp.float32)
+    batch = stream.batch_at(1)
+    W = jnp.asarray(sched.stacked(0, 1))
+    out_d2, m_d2 = jax.jit(step_d2)(s_d2, batch, W)
+    out_sg, m_sg = jax.jit(step_sg)(s_sg, batch, W)
+    np.testing.assert_allclose(float(m_d2["loss"]), float(m_sg["loss"]),
+                               rtol=1e-5)
+    # warm start makes the first D^2 update exactly a DSGD step
+    assert _max_err(out_d2.x, out_sg.x) < 1e-5

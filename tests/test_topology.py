@@ -85,11 +85,40 @@ def test_federated_schedule():
     assert topo.effective_diameter(sched) <= 4
 
 
+@pytest.mark.parametrize("n,local_steps", [(8, 3), (8, 5), (16, 4)])
+def test_federated_effective_diameter_regression(n, local_steps):
+    """Regression: the federated schedule's effective diameter is exactly 1.
+
+    Definition 2 takes the MIN over start rounds, and starting at the
+    global-averaging round connects every pair in one round — so despite
+    ``local_steps`` silent rounds per period, the effective diameter (and
+    hence the Theorem 2 graph term) is that of the complete graph."""
+    sched = topo.federated_schedule(n, local_steps)
+    assert topo.effective_diameter(sched, period=sched.period) == 1
+
+
 def test_effective_distance_min_over_start_round():
     """Definition 2 takes the min over start rounds: starting right before
     the averaging round of a federated schedule gives distance 1."""
     sched = topo.federated_schedule(8, local_steps=5)
     assert topo.effective_distance(sched, [0], [5], period=sched.period) == 1
+
+
+def test_classify_adjacency_round_structures():
+    """structure(t) descriptors: each graph family maps to its tag."""
+    assert topo.classify_adjacency(topo.complete_graph(8)).kind == "complete"
+    assert topo.classify_adjacency(np.eye(8, dtype=bool)).kind == "empty"
+    star = topo.classify_adjacency(topo.star_graph(8, 2))
+    assert star.kind == "sun" and star.center == (2,)
+    sun = topo.classify_adjacency(topo.sun_shaped_graph(9, [1, 4]))
+    assert sun.kind == "sun" and sun.center == (1, 4)
+    m = topo.classify_adjacency(topo.one_peer_exponential_schedule(8)(0))
+    assert m.kind == "matching" and m.perm == (1, 0, 3, 2, 5, 4, 7, 6)
+    assert topo.classify_adjacency(topo.ring_graph(8)).kind == "dense"
+    # schedules expose the per-round descriptor directly
+    fed = topo.federated_schedule(8, 2)
+    assert [fed.structure(t).kind for t in range(3)] == \
+        ["empty", "empty", "complete"]
 
 
 def test_random_matching_schedule():
