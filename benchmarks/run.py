@@ -16,10 +16,12 @@ Prints ``name,us_per_call,derived`` CSV lines.
       derived = max prog / cap over the run (<= 1).
   kernel_*           — Pallas kernels (interpret mode) vs jnp oracle.
       derived = max |kernel - oracle|.
+  engine_step_*      — throughput of the engine-built distributed step,
+      one row per update rule; also writes BENCH_engine.json.
   roofline_summary   — reads experiments/dryrun/*.json if present.
       derived = #pairs whose dominant term is compute/memory/collective.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]
 """
 
 from __future__ import annotations
@@ -308,6 +310,48 @@ def bench_gossip_plan(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Engine step throughput (one row per update rule)
+# ---------------------------------------------------------------------------
+
+def bench_engine_step(quick: bool) -> None:
+    """Throughput of the engine-built distributed train step for EVERY
+    update rule the single-source engine defines, on the reduced qwen
+    config with dense gossip.  derived = steps/s and the rule's gossip
+    rounds per step.  Also writes experiments/bench/BENCH_engine.json —
+    the BENCH trajectory artifact CI uploads."""
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.core import engine, gossip
+    from repro.data import token_stream_for
+    from repro.dist import steps as dsteps
+    from repro.models import build
+
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    model = build(cfg)
+    n = 4
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    rows = []
+    for algo in engine.ALGORITHMS:
+        R = 2 if algo == "mc_dsgt" else 1
+        wps = engine.make_rule(algo, gamma=0.05, R=R).weights_per_step
+        stream = token_stream_for(cfg, n, R, 1, 16, seed=0, active_vocab=16)
+        init_s, warm, step = dsteps.make_train_step(
+            model, cfg, algo=algo, gamma=0.05, R=R)
+        state = warm(init_s(jax.random.key(0), n, jnp.float32),
+                     stream.batch_at(0))
+        W = jnp.asarray(sched.stacked(0, wps))
+        us, _ = _timed(jax.jit(step), state, stream.batch_at(1), W)
+        derived = f"steps_per_s={1e6 / max(us, 1e-9):.1f}|wps={wps}"
+        record(f"engine_step_{algo}", us, derived)
+        rows.append({"name": f"engine_step_{algo}",
+                     "us_per_call": round(us, 1), "derived": derived})
+    os.makedirs("experiments/bench", exist_ok=True)
+    with open("experiments/bench/BENCH_engine.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print("wrote experiments/bench/BENCH_engine.json", file=sys.stderr)
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary (from dry-run artifacts)
 # ---------------------------------------------------------------------------
 
@@ -328,9 +372,26 @@ def bench_roofline(quick: bool) -> None:
            f"|collective:{dom['collective']}")
 
 
+BENCHES = [
+    ("theorem3", bench_theorem3),
+    ("gossip_plan", bench_gossip_plan),
+    ("engine_step", bench_engine_step),
+    ("kernels", bench_kernels),
+    ("theorem4", bench_theorem4),
+    ("table1_rate_T", bench_table1_rate_T),
+    ("table1_speedup_n", bench_table1_speedup_n),
+    ("r_ablation", bench_r_ablation),
+    ("figure2", bench_figure2),
+    ("roofline", bench_roofline),
+]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only benchmarks whose name contains SUBSTR "
+                         "(e.g. --only engine_step for the CI artifact)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results to a BENCH json (default "
                          "experiments/bench/BENCH.json under --quick)")
@@ -339,15 +400,9 @@ def main() -> None:
     json_path = args.json or (quick and "experiments/bench/BENCH.json" or None)
 
     print("name,us_per_call,derived")
-    bench_theorem3(quick)
-    bench_gossip_plan(quick)
-    bench_kernels(quick)
-    bench_theorem4(quick)
-    bench_table1_rate_T(quick)
-    bench_table1_speedup_n(quick)
-    bench_r_ablation(quick)
-    bench_figure2(quick)
-    bench_roofline(quick)
+    for name, fn in BENCHES:
+        if args.only is None or args.only in name:
+            fn(quick)
     if json_path:
         if os.path.dirname(json_path):
             os.makedirs(os.path.dirname(json_path), exist_ok=True)

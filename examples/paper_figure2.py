@@ -23,7 +23,7 @@ import numpy as np
 from repro import configs
 from repro.configs.logreg_paper import COVTYPE, MNIST
 from repro.core import algorithms as alg
-from repro.core import gossip, topology as topo
+from repro.core import driver, gossip, topology as topo
 from repro.data import logreg_dataset, logreg_loss_and_grad
 
 
@@ -56,11 +56,14 @@ def run_setup(lc, T_budget: int, gamma: float, seed: int = 0):
     # tuned curves): MC-DSGT's R-fold gradient accumulation cuts oracle
     # noise by R, admitting up to ~R x larger steps at equal stability.
     def tuned(make_algo, steps, gammas):
+        # each candidate runs through the unified driver (staged schedule,
+        # in-jit window gather) — no hand-rolled loop
         best = None
         for g in gammas:
-            _, hist = alg.run(make_algo(g), x0, grad_fn, sched, steps,
-                              jax.random.key(seed), eval_fn=eval_fn,
-                              eval_every=max(1, steps // 40))
+            _, hist = driver.run_algorithm(make_algo(g), x0, grad_fn, sched,
+                                           steps, jax.random.key(seed),
+                                           eval_fn=eval_fn,
+                                           eval_every=max(1, steps // 40))
             pts = [(t, float(v)) for t, v in hist]
             if best is None or pts[-1][1] < best[-1][1]:
                 best = pts

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import algorithms as alg
-from repro.core import gossip
+from repro.core import driver, gossip
 from repro.data import logreg_dataset, logreg_loss_and_grad
 
 
@@ -40,14 +40,16 @@ def main():
           f"|C|={max(1, int(n * (1 - beta)))})  budget T={T_budget}")
     print(f"{'algo':10s} {'T':>6s} {'||grad f(x_bar)||^2':>22s}")
     results = {}
+    # every algorithm is one engine UpdateRule driven by the unified
+    # repro.core.driver loop — same staging/loop as the distributed CLI
     for name, algo, steps in [
         ("dsgd", alg.dsgd(gamma), T_budget),
         ("dsgt", alg.dsgt(gamma), T_budget // 2),
         ("mc_dsgt", alg.mc_dsgt(gamma, R=R), T_budget // (2 * R)),
     ]:
-        state, hist = alg.run(algo, x0, grad_fn, sched, steps,
-                              jax.random.key(0), eval_fn=eval_fn,
-                              eval_every=max(1, steps // 8))
+        state, hist = driver.run_algorithm(algo, x0, grad_fn, sched, steps,
+                                           jax.random.key(0), eval_fn=eval_fn,
+                                           eval_every=max(1, steps // 8))
         for t, g in hist[-1:]:
             print(f"{name:10s} {t:6d} {float(g):22.6f}")
         results[name] = float(hist[-1][1])

@@ -10,14 +10,39 @@ import msgpack
 import numpy as np
 
 
+def _dtype_from_name(name: str) -> np.dtype:
+    """Resolve a saved dtype.  ``dtype.str`` round-trips for the native
+    numpy types but NOT for the ml_dtypes extension types (bfloat16 & co.
+    stringify as raw-void '<V2'), so we save ``dtype.name`` and resolve
+    extension names through ml_dtypes.  Checkpoints written before the
+    name-based format stored the mangled '<V2' itself; bfloat16 is the only
+    2-byte extension dtype the trainer ever stored, so map it back."""
+    import ml_dtypes
+
+    try:
+        dt = np.dtype(name)
+        if dt.kind != "V":
+            return dt
+        if dt.itemsize == 2:  # legacy checkpoint's mangled bf16
+            return np.dtype(ml_dtypes.bfloat16)
+        raise ValueError(f"unresolvable void dtype {name!r} in checkpoint")
+    except TypeError:
+        pass
+    try:
+        return np.dtype(getattr(ml_dtypes, name))
+    except AttributeError:
+        raise ValueError(f"unknown checkpoint dtype {name!r}") from None
+
+
 def _pack_leaf(x):
     arr = np.asarray(x)
-    return {b"dtype": arr.dtype.str.encode(), b"shape": list(arr.shape),
+    return {b"dtype": arr.dtype.name.encode(), b"shape": list(arr.shape),
             b"data": arr.tobytes()}
 
 
 def _unpack_leaf(d):
-    arr = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode()))
+    dtype = _dtype_from_name(d[b"dtype"].decode())
+    arr = np.frombuffer(d[b"data"], dtype=dtype)
     return jnp.asarray(arr.reshape(d[b"shape"]))
 
 

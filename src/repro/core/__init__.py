@@ -1,15 +1,19 @@
 """Core contribution of the paper: time-varying topologies, gossip weight
-matrices, effective diameter, decentralized algorithms (DSGD/DSGT/MC-DSGT/D2)
-and the lower-bound hard instances — plus the structure-aware gossip
-planning layer (GossipPlan) that lowers every topology to its cheapest
-collective."""
+matrices, effective diameter, the single-source update-rule engine behind
+every decentralized algorithm (DSGD / DSGT / MC-DSGT / D² / local_sgd /
+gt_local), the unified training driver, and the lower-bound hard instances
+— plus the structure-aware gossip planning layer (GossipPlan) that lowers
+every topology to its cheapest collective."""
 
-from . import algorithms, gossip, lower_bound, topology  # noqa: F401
+from . import algorithms, driver, engine, gossip, lower_bound, topology  # noqa: F401
 from .algorithms import (  # noqa: F401
     complete_mix,
     d2,
     dsgd,
     dsgt,
+    from_rule,
+    gt_local,
+    local_sgd,
     make_plan_mixer,
     mc_dsgt,
     mix,
@@ -19,6 +23,7 @@ from .algorithms import (  # noqa: F401
     sun_mix,
     warm_start,
 )
+from .engine import ALGORITHMS, EngineOps, EngineState, UpdateRule, make_rule  # noqa: F401
 from .gossip import (  # noqa: F401
     GossipPlan,
     GossipRound,

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import driver, engine
+
 PyTree = Any
 GradFn = Callable[[PyTree, jax.Array], PyTree]
 
@@ -263,32 +265,19 @@ def broadcast_nodes(tree: PyTree, n: int) -> PyTree:
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
 
 
-def _axpy(a: float | jax.Array, x: PyTree, y: PyTree) -> PyTree:
-    return jax.tree.map(lambda u, v: v + a * u.astype(v.dtype), x, y)
-
-
-def _accumulate(grad_fn: GradFn, x: PyTree, key: jax.Array, R: int) -> PyTree:
-    """Gradient accumulation: (1/R) sum_r O(x; zeta_r)."""
-    if R == 1:
-        return grad_fn(x, key)
-    keys = jax.random.split(key, R)
-    shapes = jax.eval_shape(grad_fn, x, keys[0])
-    zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
-
-    def body(acc, k):
-        return jax.tree.map(jnp.add, acc, grad_fn(x, k)), None
-
-    acc, _ = jax.lax.scan(body, zero, keys)
-    return jax.tree.map(lambda a: a / R, acc)
+# Shared pytree arithmetic lives in the engine (single source); re-exported
+# here for the runtimes and tests that import it from this module.
+_axpy = engine._axpy
+_accumulate = engine._accumulate
 
 
 # ---------------------------------------------------------------------------
-# Algorithm interfaces
+# Algorithm interfaces (thin adapters over repro.core.engine)
 # ---------------------------------------------------------------------------
 
 class AlgoState(NamedTuple):
     x: PyTree            # stacked model copies
-    h: Optional[PyTree]  # gradient tracker (None for DSGD)
+    h: Optional[PyTree]  # gradient tracker (None for DSGD), x^{k-1} for D^2
     g_prev: Optional[PyTree]
     opt_state: Any
     k: jax.Array         # round counter
@@ -298,141 +287,111 @@ class AlgoState(NamedTuple):
 class DecentralizedAlgorithm:
     """A decentralized optimizer: ``weights`` passed to ``step`` is the
     (rounds, n, n) stack of gossip matrices this round consumes (rounds =
-    ``weights_per_step``)."""
+    ``weights_per_step``).  Built from an :class:`repro.core.engine`
+    UpdateRule by :func:`from_rule` — the update arithmetic itself lives in
+    the engine, shared with the distributed runtime."""
 
     name: str
     weights_per_step: int
     init: Callable[[PyTree], AlgoState]
     step: Callable[[AlgoState, GradFn, jax.Array, jax.Array], AlgoState]
+    warm: Callable[[AlgoState, GradFn, jax.Array], AlgoState] = None
+    rule: "engine.UpdateRule" = None
 
 
-# -- DSGD [12] ---------------------------------------------------------------
+def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm:
+    """Bind an UpdateRule to the host reference runtime: the stacked-einsum
+    multi-consensus mixer and a ``grad_fn(x, key)`` oracle closure."""
+    if local_opt is not None and not rule.supports_local_opt:
+        raise ValueError(f"algo {rule.name!r} does not support a local "
+                         "optimizer hook")
+
+    def _ops(grad_fn, weights, key):
+        return engine.EngineOps(
+            mix=lambda off, r, tree: multi_consensus(
+                weights[off:off + r], tree),
+            grad=lambda x: (None, engine._accumulate(grad_fn, x, key,
+                                                     rule.R)),
+            local_update=(local_opt.update if local_opt
+                          else (lambda g, s: (g, s))),
+            cast_aux=lambda tree: tree)
+
+    def _to_engine(s: AlgoState) -> engine.EngineState:
+        return engine.EngineState(s.x, s.h, s.g_prev, s.opt_state, s.k)
+
+    def _to_algo(s: engine.EngineState) -> AlgoState:
+        return AlgoState(s.x, s.h, s.g_prev, s.opt, s.k)
+
+    def init(x0: PyTree) -> AlgoState:
+        return _to_algo(engine.init_state(
+            rule, x0, opt_init=local_opt.init if local_opt else None))
+
+    def step(state: AlgoState, grad_fn: GradFn, weights: jax.Array,
+             key: jax.Array) -> AlgoState:
+        es, _ = engine.step(rule, _to_engine(state),
+                            _ops(grad_fn, weights, key))
+        return _to_algo(es)
+
+    def warm(state: AlgoState, grad_fn: GradFn, key: jax.Array) -> AlgoState:
+        return _to_algo(engine.warm_start(rule, _to_engine(state),
+                                          _ops(grad_fn, None, key)))
+
+    return DecentralizedAlgorithm(rule.name, rule.weights_per_step, init,
+                                  step, warm, rule)
+
+
+# -- The paper's rules + the federated/local-update family, one line each. --
 
 def dsgd(gamma: float, local_opt=None) -> DecentralizedAlgorithm:
-    """x^{k+1} = W^k (x^k - gamma * g^k)."""
+    """DSGD [12]: x^{k+1} = W^k (x^k - gamma * g^k)."""
+    return from_rule(engine.make_rule("dsgd", gamma), local_opt)
 
-    def init(x0: PyTree) -> AlgoState:
-        opt_state = local_opt.init(x0) if local_opt else None
-        return AlgoState(x=x0, h=None, g_prev=None, opt_state=opt_state,
-                         k=jnp.zeros((), jnp.int32))
-
-    def step(state: AlgoState, grad_fn: GradFn, weights: jax.Array,
-             key: jax.Array) -> AlgoState:
-        g = grad_fn(state.x, key)
-        if local_opt:
-            upd, opt_state = local_opt.update(g, state.opt_state)
-        else:
-            upd, opt_state = g, None
-        x = _axpy(-gamma, upd, state.x)
-        x = multi_consensus(weights, x)
-        return AlgoState(x=x, h=None, g_prev=None, opt_state=opt_state,
-                         k=state.k + 1)
-
-    return DecentralizedAlgorithm("dsgd", 1, init, step)
-
-
-# -- DSGT [40] ---------------------------------------------------------------
 
 def dsgt(gamma: float) -> DecentralizedAlgorithm:
-    """x^{k+1} = W^k (x^k - gamma h^k);  h^{k+1} = W^k (h^k + g^{k+1} - g^k).
+    """DSGT [40]: x^{k+1} = W (x^k - gamma h^k);
+    h^{k+1} = W (h^k + g^{k+1} - g^k).  Two gossip rounds per step."""
+    return from_rule(engine.make_rule("dsgt", gamma))
 
-    Consumes two gossip rounds per step (one for x, one for h), matching the
-    accounting of Algorithm 1 with R = 1.
-    """
-
-    def init(x0: PyTree) -> AlgoState:
-        return AlgoState(x=x0, h=None, g_prev=None, opt_state=None,
-                         k=jnp.zeros((), jnp.int32))
-
-    def step(state: AlgoState, grad_fn: GradFn, weights: jax.Array,
-             key: jax.Array) -> AlgoState:
-        if state.h is None:
-            raise ValueError("call warm_start first (h requires g at x0)")
-        Wx, Wh = weights[0], weights[1]
-        _, k_g = jax.random.split(key)
-        x = mix(Wx, _axpy(-gamma, state.h, state.x))
-        g = grad_fn(x, k_g)
-        h = mix(Wh, _axpy(1.0, g, _axpy(-1.0, state.g_prev, state.h)))
-        return AlgoState(x=x, h=h, g_prev=g, opt_state=None, k=state.k + 1)
-
-    return DecentralizedAlgorithm("dsgt", 2, init, step)
-
-
-# -- MC-DSGT (Algorithm 1) ----------------------------------------------------
 
 def mc_dsgt(gamma: float, R: int) -> DecentralizedAlgorithm:
-    """Multi-Consensus DSGT: gradient accumulation over R oracle queries and
-    R gossip rounds per consensus step.  ``weights`` is the (2R, n, n) stack
-    [W^{2kR}, ..., W^{(2k+2)R - 1}]; the first R mix x, the last R mix h.
-    """
+    """Multi-Consensus DSGT (Algorithm 1): R-sample gradient accumulation
+    and R gossip rounds per consensus phase; ``weights`` is the (2R, n, n)
+    stack [W^{2kR}, ..., W^{(2k+2)R - 1}] (first R mix x, last R mix h)."""
+    return from_rule(engine.make_rule("mc_dsgt", gamma, R=R))
 
-    def init(x0: PyTree) -> AlgoState:
-        return AlgoState(x=x0, h=None, g_prev=None, opt_state=None,
-                         k=jnp.zeros((), jnp.int32))
-
-    def step(state: AlgoState, grad_fn: GradFn, weights: jax.Array,
-             key: jax.Array) -> AlgoState:
-        if state.h is None:
-            raise ValueError("call warm_start first (h^0 = averaged g at x0)")
-        Wx, Wh = weights[:R], weights[R:]
-        x = multi_consensus(Wx, _axpy(-gamma, state.h, state.x))
-        g = _accumulate(grad_fn, x, key, R)
-        h = multi_consensus(
-            Wh, _axpy(1.0, g, _axpy(-1.0, state.g_prev, state.h)))
-        return AlgoState(x=x, h=h, g_prev=g, opt_state=None, k=state.k + 1)
-
-    return DecentralizedAlgorithm("mc_dsgt", 2 * R, init, step)
-
-
-# -- D^2 [35] ------------------------------------------------------------------
 
 def d2(gamma: float) -> DecentralizedAlgorithm:
-    """D^2 (Tang et al. [35]): removes data-heterogeneity influence via the
-    difference update x^{k+1} = W(2 x^k - x^{k-1} - gamma (g^k - g^{k-1})).
-    Requires symmetric PSD W (the Theorem 3 matrices qualify).  Included as
-    an extra Table-1-family baseline beyond the paper's DSGD/DSGT."""
+    """D^2 [35]: x^{k+1} = W(2 x^k - x^{k-1} - gamma (g^k - g^{k-1})).
+    Requires symmetric PSD W (the Theorem 3 matrices qualify)."""
+    return from_rule(engine.make_rule("d2", gamma))
 
-    def init(x0: PyTree) -> AlgoState:
-        return AlgoState(x=x0, h=None, g_prev=None, opt_state=None,
-                         k=jnp.zeros((), jnp.int32))
 
-    def step(state: AlgoState, grad_fn: GradFn, weights: jax.Array,
-             key: jax.Array) -> AlgoState:
-        if state.g_prev is None:
-            raise ValueError("call warm_start first")
-        x_prev = state.opt_state  # reuse the slot for x^{k-1}
-        g = grad_fn(state.x, key)
-        z = jax.tree.map(lambda xk, xm, gk, gm: 2 * xk - xm - gamma * (gk - gm),
-                         state.x, x_prev, g, state.g_prev)
-        x = mix(weights[0], z)
-        return AlgoState(x=x, h=None, g_prev=g, opt_state=state.x,
-                         k=state.k + 1)
+def local_sgd(gamma: float, local_opt=None) -> DecentralizedAlgorithm:
+    """Local SGD / FedAvg as an update rule: x^{k+1} = W^k x^k - gamma g^k
+    with the oracle queried at the mixed iterate.  Over a federated
+    schedule, ``empty`` rounds make this a pure local step and the
+    periodic ``complete`` round is the global average (paper §1)."""
+    return from_rule(engine.make_rule("local_sgd", gamma), local_opt)
 
-    return DecentralizedAlgorithm("d2", 1, init, step)
+
+def gt_local(gamma: float, local_opt=None) -> DecentralizedAlgorithm:
+    """Gradient tracking with local updates (DIGing-style placement):
+    x^{k+1} = W^k x^k - gamma h^k;  h^{k+1} = W^k h^k + g^{k+1} - g^k.
+    x and h share ONE gossip round per step and the tracker correction
+    stays local, so the tracker keeps tracking through empty (local-only)
+    rounds of a federated schedule."""
+    return from_rule(engine.make_rule("gt_local", gamma), local_opt)
 
 
 def warm_start(algo: DecentralizedAlgorithm, state: AlgoState,
                grad_fn: GradFn, key: jax.Array) -> AlgoState:
-    """Initialize the gradient tracker: g~^0 = accumulated grads at x^0 and
-    h^0 = (1/n) sum_i g~_i^0 replicated (Algorithm 1's initialization)."""
-    if algo.name == "dsgd":
-        return state
-    if algo.name == "d2":
-        # first step reduces to DSGD: x^0_prev = x^0, g^{-1} = g^0... use
-        # x_prev = x0 and g_prev = oracle at x0 so the first update is
-        # x^1 = W(x^0 - gamma * 0) shifted; standard D^2 warm start uses one
-        # DSGD step, which we emulate by setting g_prev = 0.
-        g0 = jax.tree.map(jnp.zeros_like, state.x)
-        return state._replace(g_prev=g0, opt_state=state.x)
-    R = algo.weights_per_step // 2
-    g0 = _accumulate(grad_fn, state.x, key, R)
-    h0 = jax.tree.map(
-        lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape), g0)
-    return state._replace(h=h0, g_prev=g0)
+    """Tracker/correction initialization (Algorithm 1's h^0 for the
+    tracking rules; x^{-1}/g^{-1} for D^2) — delegates to the engine."""
+    return algo.warm(state, grad_fn, key)
 
 
 # ---------------------------------------------------------------------------
-# Driver
+# Driver (delegates to the unified repro.core.driver loop)
 # ---------------------------------------------------------------------------
 
 def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
@@ -444,33 +403,15 @@ def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
     The schedule is staged on device ONCE up front — one period (or, for
     aperiodic schedules, the whole run's window) of matrices — and the
     jitted step gathers its ``weights_per_step`` rounds from the staged
-    stack by index: no per-step host ``stacked()`` + transfer.
+    stack by index: no per-step host ``stacked()`` + transfer.  The
+    staging, loop, and history recording are the shared
+    :mod:`repro.core.driver` (same code path as the distributed CLI).
 
     Returns (final_state, history) where history records ``eval_fn`` of the
     node-mean model x-bar every ``eval_every`` rounds, keyed by the total
     gossip/oracle budget T = k * weights_per_step consumed so far (the
     paper's x-axis in Figure 2).
     """
-    state = algo.init(x0)
-    key, k0 = jax.random.split(key)
-    state = warm_start(algo, state, grad_fn, k0)
-    wps = algo.weights_per_step
-    total = max(1, num_steps * wps)
-    stack = min(getattr(weight_schedule, "period", None) or total, total)
-    Ws_all = jnp.asarray(weight_schedule.stacked(0, stack))
-
-    def _step(state, Ws_all, t, sub):
-        idx = (t + jnp.arange(wps)) % stack
-        return algo.step(state, grad_fn, jnp.take(Ws_all, idx, axis=0), sub)
-
-    step = jax.jit(_step)
-    history = []
-    t = 0
-    for k in range(num_steps):
-        key, sub = jax.random.split(key)
-        state = step(state, Ws_all, t % stack, sub)
-        t += wps
-        if eval_fn is not None and (k % eval_every == 0 or k == num_steps - 1):
-            xbar = jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
-            history.append((t, jax.device_get(eval_fn(xbar))))
-    return state, history
+    return driver.run_algorithm(algo, x0, grad_fn, weight_schedule,
+                                num_steps, key, eval_fn=eval_fn,
+                                eval_every=eval_every)

@@ -1,0 +1,194 @@
+"""Unified training driver: the ONE place that stages gossip on device,
+gathers per-step windows in-jit, warm-starts (or restores), records
+eval/history, and runs the checkpoint cadence.
+
+Consumed by :func:`repro.core.algorithms.run` (host reference),
+:mod:`repro.launch.train` (distributed CLI), ``benchmarks/run.py`` and the
+examples — none of them hand-roll a staging/driver loop anymore.
+
+The staging contract (shared by every path): the whole schedule window —
+one period of dense matrices, or the gossip plan's tensors — crosses the
+host boundary ONCE, and the jitted step gathers its ``weights_per_step``
+rounds by ``t % period`` index.  No per-step ``stacked()`` or host
+transfer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Gossip staging + in-jit window gather
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagedGossip:
+    """Device-resident gossip for a whole run.
+
+    ``impl='dense'``: ``arrays`` is the (period, n, n) stacked window;
+    the bound step gathers ``wps`` rounds by index.  ``impl='auto'``:
+    ``arrays`` is the staged :class:`repro.core.gossip.GossipPlan` tensors;
+    the step receives them plus the start round ``t``.
+    """
+
+    impl: str
+    arrays: Any
+    period: int
+    wps: int
+    static_t: bool = False
+
+
+def stage_plan(plan) -> dict:
+    """Upload a :class:`repro.core.gossip.GossipPlan`'s tensors to device
+    ONCE — the canonical staging entry (``dist.collectives.stage_plan``
+    delegates here).  The returned dict is passed unchanged to every jitted
+    step, which indexes it by ``t % period``."""
+    return jax.tree.map(jnp.asarray, plan.tensors())
+
+
+def stage(schedule, *, wps: int, impl: str = "dense", total: int | None = None,
+          plan=None, static_t: bool = False) -> StagedGossip:
+    """Stage ``schedule`` on device once.
+
+    ``total`` caps the dense window (host runs stage ``min(period, total)``
+    rounds; pass None to always stage one full period — the CLI does, so a
+    ``--restore`` continuation lands on the right phase).  For ``auto``,
+    ``plan`` is the GossipPlan (defaults to one planned period).
+    """
+    if impl == "auto":
+        if plan is None:
+            plan = schedule.plan(0, schedule.period)
+        return StagedGossip("auto", stage_plan(plan), plan.period, wps,
+                            static_t=static_t)
+    period = getattr(schedule, "period", None) or (total or 1)
+    if total is not None:
+        period = min(period, total)
+    arrays = jnp.asarray(schedule.stacked(0, period))
+    return StagedGossip("dense", arrays, period, wps)
+
+
+def bind_step(staged: StagedGossip, core_step):
+    """Jit ``core_step`` against the staged gossip.
+
+    ``core_step(state, extra, gossip, t)`` — ``extra`` is the per-step
+    input (a batch, a PRNG key, ...).  Dense: ``gossip`` arrives as the
+    step's gathered ``(wps, n, n)`` window.  Auto: ``gossip`` is the plan
+    tensors and ``t`` the start round (static when the plan dispatch is).
+
+    Returns ``step(state, extra, t) -> (state, out)`` with the staged
+    arrays closed over.
+    """
+    if staged.impl == "auto":
+        fn = (jax.jit(core_step, static_argnums=3) if staged.static_t
+              else jax.jit(core_step))
+        return lambda state, extra, t: fn(state, extra, staged.arrays, t)
+
+    wps, period = staged.wps, staged.period
+
+    def gathered(state, extra, Ws_all, t):
+        idx = (t + jnp.arange(wps)) % period
+        return core_step(state, extra, jnp.take(Ws_all, idx, axis=0), t)
+
+    fn = jax.jit(gathered)
+    return lambda state, extra, t: fn(state, extra, staged.arrays, t)
+
+
+# ---------------------------------------------------------------------------
+# Restore-or-warm + the loop
+# ---------------------------------------------------------------------------
+
+def restore_or_warm(state, *, restore: Optional[str] = None, load_fn=None,
+                    warm: Optional[Callable] = None):
+    """Either restore ``(state, start_step)`` from a checkpoint or apply the
+    rule's warm start — never both (a checkpoint already holds warm state)."""
+    if restore:
+        state, start_step = load_fn(restore, state)
+        return state, int(start_step)
+    return (warm(state) if warm is not None else state), 0
+
+
+def run_loop(step, state, *, steps: int, wps: int, period: int,
+             start_step: int = 0, extra_fn: Optional[Callable] = None,
+             record: Optional[Callable] = None,
+             checkpoint: Optional[str] = None, checkpoint_every: int = 50,
+             save_fn=None):
+    """The training loop every runtime shares.
+
+    ``step(state, extra, t)`` — a :func:`bind_step` result; ``t`` advances
+    by ``wps`` per step, taken modulo ``period``, and continues from
+    ``start_step * wps`` so restored runs resume the schedule at the right
+    phase.  ``extra_fn(k)`` supplies the per-step input.  ``record(k, t,
+    state, out, dt)`` is called after every step; non-None returns are
+    appended to the history.  ``save_fn(path, state, step)`` runs every
+    ``checkpoint_every`` steps and once at the end.
+    """
+    history = []
+    t = start_step * wps
+    last = start_step + steps - 1
+    for k in range(start_step, start_step + steps):
+        extra = extra_fn(k) if extra_fn is not None else None
+        t0 = time.time()
+        state, out = step(state, extra, t % period)
+        dt = time.time() - t0
+        t += wps
+        if record is not None:
+            rec = record(k, t, state, out, dt)
+            if rec is not None:
+                history.append(rec)
+        if checkpoint and save_fn is not None and \
+                (k + 1) % checkpoint_every == 0 and k != last:
+            save_fn(checkpoint, state, k + 1)
+    if checkpoint and save_fn is not None:
+        save_fn(checkpoint, state, start_step + steps)
+    return state, history
+
+
+# ---------------------------------------------------------------------------
+# Host-reference convenience (algorithms.run and the examples)
+# ---------------------------------------------------------------------------
+
+def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
+                  key: jax.Array, eval_fn=None, eval_every: int = 1):
+    """Drive a host :class:`repro.core.algorithms.DecentralizedAlgorithm`
+    over a :class:`repro.core.gossip.WeightSchedule`.
+
+    Returns (final_state, history) where history records ``eval_fn`` of the
+    node-mean model x̄ every ``eval_every`` steps (plus the final step),
+    keyed by the total gossip/oracle budget T consumed so far (the paper's
+    Figure 2 x-axis).
+    """
+    state = algo.init(x0)
+    key, k0 = jax.random.split(key)
+    state = algo.warm(state, grad_fn, k0)
+    wps = algo.weights_per_step
+    total = max(1, num_steps * wps)
+    staged = stage(weight_schedule, wps=wps, total=total)
+
+    def core(state, sub, weights, t):
+        return algo.step(state, grad_fn, weights, sub), None
+
+    step = bind_step(staged, core)
+
+    def extra_fn(k):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def record(k, t, state, out, dt):
+        if eval_fn is None:
+            return None
+        if k % eval_every == 0 or k == num_steps - 1:
+            xbar = jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
+            return (t, jax.device_get(eval_fn(xbar)))
+        return None
+
+    return run_loop(step, state, steps=num_steps, wps=wps,
+                    period=staged.period, extra_fn=extra_fn, record=record)

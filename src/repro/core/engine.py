@@ -1,0 +1,288 @@
+"""Single-source decentralized update-rule engine.
+
+Every decentralized algorithm in this repo — the paper's DSGD / DSGT /
+MC-DSGT (Algorithm 1), the D² baseline, and the federated family
+(``local_sgd``, ``gt_local``) — is defined here exactly once as an
+:class:`UpdateRule`: a declarative spec naming the rule's *structure*
+(tracker/correction init, gradient-phase placement, pre/post-mix update
+placement, rounds consumed per step, local-optimizer hook) that one generic
+:func:`step` interprets.  Both runtimes consume the same rule:
+
+* the host reference (:mod:`repro.core.algorithms`) binds :class:`EngineOps`
+  to the stacked-``einsum`` multi-consensus and a ``grad_fn`` closure;
+* the distributed runtime (:mod:`repro.dist.steps`) binds it to the
+  mesh/plan mixers, the clipped R-microbatch loss/grad, and the bf16
+  tracker cast.
+
+Adding an algorithm means adding ONE rule spec (or one ``kind`` branch for
+a genuinely new template) — zero edits in either runtime.
+
+Rule structure cheat-sheet (γ = stepsize, u = local-optimizer transform,
+Mix = the step's gossip window, R = accumulation/consensus rounds):
+
+============  =========================================================
+``dsgd``      x ← Mix(x − γ·u(g(x)))                       [12]
+``local_sgd`` x ← Mix(x) − γ·u(g(Mix(x)))        (FedAvg over a
+              federated schedule: empty rounds ⇒ pure local steps)
+``dsgt``      x ← Mix(x − γ·h);  h ← Mix(h + g − g⁻)        [40]
+``mc_dsgt``   same, R gossip rounds per mix + R-sample grads (Alg. 1)
+``gt_local``  x ← Mix(x) − γ·h;  h ← Mix(h) + g − g⁻   (DIGing-style
+              tracking with local updates: x and h share ONE round)
+``d2``        x ← Mix(2x − x⁻ − γ(g − g⁻))                  [35]
+============  =========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+GradFn = Callable[[PyTree, jax.Array], PyTree]
+
+
+# ---------------------------------------------------------------------------
+# Shared pytree arithmetic (the only place update math lives)
+# ---------------------------------------------------------------------------
+
+def _axpy(a: float | jax.Array, x: PyTree, y: PyTree) -> PyTree:
+    """y + a * x on every leaf (computed in y's dtype)."""
+    return jax.tree.map(lambda u, v: v + a * u.astype(v.dtype), x, y)
+
+
+def _accumulate(grad_fn: GradFn, x: PyTree, key: jax.Array, R: int) -> PyTree:
+    """Gradient accumulation: (1/R) sum_r O(x; zeta_r) (eq. 19)."""
+    if R == 1:
+        return grad_fn(x, key)
+    keys = jax.random.split(key, R)
+    shapes = jax.eval_shape(grad_fn, x, keys[0])
+    zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def body(acc, k):
+        return jax.tree.map(jnp.add, acc, grad_fn(x, k)), None
+
+    acc, _ = jax.lax.scan(body, zero, keys)
+    return jax.tree.map(lambda a: a / R, acc)
+
+
+def _tracker_delta(h: PyTree, g: PyTree, g_prev: PyTree) -> PyTree:
+    """h + g − g_prev in the gradient dtype (trackers may be stored bf16)."""
+    return jax.tree.map(
+        lambda hh, gi, gp: hh.astype(gi.dtype) + gi - gp.astype(gi.dtype),
+        h, g, g_prev)
+
+
+# ---------------------------------------------------------------------------
+# Engine interfaces
+# ---------------------------------------------------------------------------
+
+class EngineState(NamedTuple):
+    """Runtime-neutral algorithm state.  ``h`` doubles as the tracker
+    (tracking rules) or x^{k-1} (difference rules); unused slots may be None
+    (host) or zero trees (distributed runtime, for uniform sharding)."""
+
+    x: PyTree
+    h: Optional[PyTree]
+    g_prev: Optional[PyTree]
+    opt: Any
+    k: jax.Array
+
+
+class EngineOps(NamedTuple):
+    """What a runtime must provide for the generic step to run.
+
+    mix(offset, rounds, tree)
+        Apply gossip rounds [t+offset, t+offset+rounds) of the step's
+        window (host: a slice of the stacked weights; dist: the staged
+        dense stack, the plan dispatcher, or the fused Pallas kernel).
+    grad(x) -> (metrics, g)
+        One accumulated stochastic-oracle sample per node (Assumption 2);
+        ``metrics`` is runtime-defined (None on host, scalar loss in dist).
+    local_update(g, opt_state) -> (update, opt_state)
+        The local-optimizer hook (identity for the paper-pure rules).
+    cast_aux(tree)
+        Storage cast for tracker state (identity on host; bf16 in dist
+        when ``aux_dtype`` is set).
+    """
+
+    mix: Callable[[int, int, PyTree], PyTree]
+    grad: Callable[[PyTree], Tuple[Any, PyTree]]
+    local_update: Callable[[PyTree, Any], Tuple[PyTree, Any]]
+    cast_aux: Callable[[PyTree], PyTree]
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRule:
+    """Declarative spec of one decentralized update rule.
+
+    kind
+        ``sgd`` (descend on the fresh gradient), ``tracking`` (descend on
+        the gradient tracker h), or ``difference`` (D²'s x/g difference
+        update).
+    mix_before_update
+        False: the gossip mix wraps the locally-updated iterate,
+        x ← Mix(x − γu) (DSGD/DSGT families).  True: mix first, update
+        locally after, x ← Mix(x) − γu — the federated placement, where an
+        ``empty`` round degenerates to a pure local step.
+    correction_in_mix
+        tracking only.  True: h ← Mix(h + g − g⁻) (the paper's DSGT).
+        False: h ← Mix(h) + g − g⁻ (DIGing/local-update placement — the
+        correction stays local, so trackers keep tracking through empty
+        rounds).
+    shared_round
+        tracking only.  True: x and h consume the SAME R-round window
+        (weights_per_step = R); False: disjoint windows (2R).
+    tracker_init
+        ``mean``: h⁰ = node-mean of g⁰ replicated (Algorithm 1);
+        ``local``: h⁰ = g⁰ per node (DIGing — no global reduction, in the
+        local-update spirit).
+    """
+
+    name: str
+    kind: str                          # 'sgd' | 'tracking' | 'difference'
+    gamma: float
+    R: int = 1
+    mix_before_update: bool = False
+    correction_in_mix: bool = True
+    shared_round: bool = False
+    tracker_init: str = "mean"
+    supports_local_opt: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("sgd", "tracking", "difference"):
+            raise ValueError(f"unknown rule kind {self.kind!r}")
+        if self.kind == "difference" and self.R != 1:
+            raise ValueError("difference rules take one oracle sample/step")
+
+    @property
+    def weights_per_step(self) -> int:
+        """Gossip rounds one step consumes (the paper's budget accounting)."""
+        if self.kind == "difference":
+            return 1
+        if self.kind == "tracking" and not self.shared_round:
+            return 2 * self.R
+        return self.R
+
+    @property
+    def uses_tracker(self) -> bool:
+        return self.kind == "tracking"
+
+    @property
+    def uses_prev_grad(self) -> bool:
+        return self.kind in ("tracking", "difference")
+
+
+# The one registry.  Adding an algorithm = adding a line here (or a factory
+# below when it takes parameters beyond gamma/R).
+def make_rule(name: str, gamma: float, R: int = 1) -> UpdateRule:
+    specs = {
+        "dsgd": dict(kind="sgd"),
+        "local_sgd": dict(kind="sgd", mix_before_update=True),
+        "dsgt": dict(kind="tracking", supports_local_opt=True),
+        "mc_dsgt": dict(kind="tracking"),
+        "gt_local": dict(kind="tracking", mix_before_update=True,
+                         correction_in_mix=False, shared_round=True,
+                         tracker_init="local"),
+        "d2": dict(kind="difference", supports_local_opt=False),
+    }
+    if name not in specs:
+        raise ValueError(f"unknown algo {name!r} (have {sorted(specs)})")
+    if name in ("dsgt", "d2") and R != 1:
+        raise ValueError(f"{name} uses R=1 (MC-DSGT is the R-round variant)")
+    return UpdateRule(name=name, gamma=gamma, R=(1 if name == "d2" else R),
+                      **specs[name])
+
+
+ALGORITHMS = ("dsgd", "local_sgd", "dsgt", "mc_dsgt", "gt_local", "d2")
+
+
+# ---------------------------------------------------------------------------
+# The generic step / warm start (interprets the spec — no per-name branches)
+# ---------------------------------------------------------------------------
+
+def step(rule: UpdateRule, state: EngineState,
+         ops: EngineOps) -> Tuple[EngineState, Any]:
+    """One round of ``rule``: returns (new state, runtime metrics)."""
+    gamma, R = rule.gamma, rule.R
+
+    if rule.kind == "sgd":
+        if rule.mix_before_update:
+            x = ops.mix(0, rule.weights_per_step, state.x)
+            metrics, g = ops.grad(x)
+            upd, opt = ops.local_update(g, state.opt)
+            x = _axpy(-gamma, upd, x)
+        else:
+            metrics, g = ops.grad(state.x)
+            upd, opt = ops.local_update(g, state.opt)
+            x = ops.mix(0, rule.weights_per_step,
+                        _axpy(-gamma, upd, state.x))
+        return state._replace(x=x, opt=opt, k=state.k + 1), metrics
+
+    if rule.kind == "difference":
+        if state.g_prev is None:
+            raise ValueError("call warm_start first")
+        metrics, g = ops.grad(state.x)
+        z = jax.tree.map(
+            lambda xk, xm, gk, gp: 2.0 * xk - xm.astype(xk.dtype)
+            - gamma * (gk - gp.astype(gk.dtype)),
+            state.x, state.h, g, state.g_prev)
+        x = ops.mix(0, 1, z)
+        # x^{k-1} rides in the h slot, uncast to keep the difference exact
+        return EngineState(x=x, h=state.x, g_prev=ops.cast_aux(g),
+                           opt=state.opt, k=state.k + 1), metrics
+
+    # tracking
+    if state.h is None:
+        raise ValueError("call warm_start first (h requires g at x0)")
+    d, opt = ops.local_update(state.h, state.opt)
+    if rule.mix_before_update:
+        x = _axpy(-gamma, d, ops.mix(0, R, state.x))
+    else:
+        x = ops.mix(0, R, _axpy(-gamma, d, state.x))
+    metrics, g = ops.grad(x)
+    h_off = 0 if rule.shared_round else R
+    if rule.correction_in_mix:
+        h = ops.mix(h_off, R, _tracker_delta(state.h, g, state.g_prev))
+    else:
+        h = _tracker_delta(ops.mix(h_off, R, state.h), g, state.g_prev)
+    return EngineState(x=x, h=ops.cast_aux(h), g_prev=ops.cast_aux(g),
+                       opt=opt, k=state.k + 1), metrics
+
+
+def warm_start(rule: UpdateRule, state: EngineState,
+               ops: EngineOps) -> EngineState:
+    """Tracker/correction initialization, defined once per rule kind:
+
+    * sgd rules need none;
+    * difference rules set x⁻ = x⁰ (in the h slot) and g⁻ = 0, so the
+      first update reduces to one DSGD step;
+    * tracking rules query the oracle at x⁰ and set h⁰ per
+      ``rule.tracker_init``.
+    """
+    if rule.kind == "sgd":
+        return state
+    if rule.kind == "difference":
+        zeros = jax.tree.map(jnp.zeros_like, state.x)
+        return state._replace(h=state.x, g_prev=ops.cast_aux(zeros))
+    _, g0 = ops.grad(state.x)
+    if rule.tracker_init == "mean":
+        h0 = jax.tree.map(
+            lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True),
+                                       g.shape), g0)
+    else:
+        h0 = g0
+    return state._replace(h=ops.cast_aux(h0), g_prev=ops.cast_aux(g0))
+
+
+def init_state(rule: UpdateRule, x0: PyTree, *, opt_init=None,
+               aux_init=None) -> EngineState:
+    """Fresh state: ``aux_init`` materializes the h/g_prev slots (None →
+    host-style lazy slots; the dist runtime passes a zeros/bf16 factory so
+    every state leaf exists for sharding)."""
+    opt = opt_init(x0) if opt_init is not None else None
+    mk = (lambda: aux_init(x0)) if aux_init is not None else (lambda: None)
+    return EngineState(x=x0, h=mk(), g_prev=mk(), opt=opt,
+                       k=jnp.zeros((), jnp.int32))

@@ -11,6 +11,13 @@ Two producers:
 * ``logreg_dataset`` — the paper's §6 protocol: binary classification data
   partitioned *heterogeneously* (a half of the nodes hold 80% positive
   samples, the other half 80% negative).
+
+Both producers support **Dirichlet(alpha) heterogeneity** — the standard
+federated-learning non-iid protocol (Hsu et al.): each node's class/token
+distribution is an independent draw from a Dirichlet prior, so small alpha
+concentrates each node on a few classes while alpha → ∞ recovers iid.
+``TokenStream(hetero_alpha=...)`` skews per-node token marginals;
+``dirichlet_partition`` splits a labelled pool into per-node index sets.
 """
 
 from __future__ import annotations
@@ -33,6 +40,10 @@ class TokenStream:
     seed: int = 0
     active_vocab: int = 0          # 0 = full vocab; else restrict to first k
                                    # tokens (learnable low-entropy stream)
+    hetero_alpha: Optional[float] = None   # Dirichlet(alpha) per-node token
+                                           # marginals; None = iid uniform
+    _node_logits: Optional[jnp.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)  # cached Dirichlet draw
     arch_type: str = "dense"
     d_model: int = 0
     frontend_tokens: int = 0
@@ -44,11 +55,35 @@ class TokenStream:
             yield self.batch_at(step)
             step += 1
 
+    def node_token_logits(self) -> jnp.ndarray:
+        """(n_nodes, active_vocab) log-probabilities: node i's token marginal
+        is an independent Dirichlet(alpha) draw (deterministic in seed —
+        nodes keep their distribution for the whole run, so the draw and its
+        device upload happen once and are cached)."""
+        if self.hetero_alpha is None:
+            raise ValueError("node_token_logits requires hetero_alpha")
+        if self._node_logits is None:
+            hi = self.active_vocab or self.vocab_size
+            rng = np.random.default_rng(
+                np.random.SeedSequence((self.seed, 0xD11C)))
+            probs = rng.dirichlet([self.hetero_alpha] * hi,
+                                  size=self.n_nodes)
+            self._node_logits = jnp.asarray(
+                np.log(np.maximum(probs, 1e-20)), jnp.float32)
+        return self._node_logits
+
     def batch_at(self, step: int) -> dict:
         key = jax.random.fold_in(jax.random.key(self.seed), step)
         shape = (self.n_nodes, self.rounds, self.batch, self.seq)
         hi = self.active_vocab or self.vocab_size
-        tokens = jax.random.randint(key, shape, 0, hi, jnp.int32)
+        if self.hetero_alpha is not None:
+            logits = self.node_token_logits()
+            keys = jax.random.split(key, self.n_nodes)
+            tokens = jax.vmap(
+                lambda k, lg: jax.random.categorical(
+                    k, lg, shape=shape[1:]))(keys, logits).astype(jnp.int32)
+        else:
+            tokens = jax.random.randint(key, shape, 0, hi, jnp.int32)
         out = {"tokens": tokens}
         if self.arch_type == "vlm":
             kp = jax.random.fold_in(key, 1)
@@ -63,13 +98,69 @@ class TokenStream:
 
 
 def token_stream_for(cfg, n_nodes: int, rounds: int, batch: int, seq: int,
-                     seed: int = 0, active_vocab: int = 0) -> TokenStream:
+                     seed: int = 0, active_vocab: int = 0,
+                     hetero_alpha: Optional[float] = None) -> TokenStream:
     return TokenStream(vocab_size=cfg.vocab_size, n_nodes=n_nodes,
                        rounds=rounds, batch=batch, seq=seq, seed=seed,
-                       active_vocab=active_vocab,
+                       active_vocab=active_vocab, hetero_alpha=hetero_alpha,
                        arch_type=cfg.arch_type, d_model=cfg.d_model,
                        frontend_tokens=cfg.frontend_tokens,
                        encoder_seq=cfg.encoder_seq)
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet node partitions (federated non-iid protocol)
+# ---------------------------------------------------------------------------
+
+def dirichlet_partition(labels: np.ndarray, n_nodes: int, alpha: float,
+                        seed: int = 0) -> list:
+    """Partition a labelled pool across nodes with Dirichlet(alpha) class
+    proportions (Hsu et al.): for each class, sample p ~ Dir(alpha * 1_n)
+    and deal that class's examples to nodes in proportion p.  Every example
+    is assigned to exactly one node; every node receives at least one
+    example (the emptiest node steals from the fullest if a draw starves
+    it).  Returns a list of ``n_nodes`` index arrays.
+    """
+    labels = np.asarray(labels)
+    rng = np.random.default_rng(np.random.SeedSequence((seed, 0xD117)))
+    parts = [[] for _ in range(n_nodes)]
+    for cls in np.unique(labels):
+        idx = np.flatnonzero(labels == cls)
+        rng.shuffle(idx)
+        p = rng.dirichlet([alpha] * n_nodes)
+        cuts = (np.cumsum(p) * len(idx)).astype(int)[:-1]
+        for node, chunk in enumerate(np.split(idx, cuts)):
+            parts[node].extend(chunk.tolist())
+    for node in range(n_nodes):  # no node may be empty
+        if not parts[node]:
+            donor = int(np.argmax([len(p) for p in parts]))
+            parts[node].append(parts[donor].pop())
+    return [np.sort(np.asarray(p, dtype=int)) for p in parts]
+
+
+def logreg_dataset_dirichlet(n_nodes: int, m: int, d: int, *, alpha: float,
+                             margin: float = 1.0, seed: int = 0):
+    """§6-style binary data partitioned by :func:`dirichlet_partition`
+    instead of the fixed 80/20 split: the label skew per node is governed
+    by ``alpha`` (small = near-single-class nodes).  Each node holds ``m``
+    samples drawn with replacement from its Dirichlet share so shapes stay
+    (n_nodes, m, d) / (n_nodes, m) like :func:`logreg_dataset`.
+    """
+    rng = np.random.default_rng(seed)
+    total = n_nodes * m
+    w_star = rng.normal(size=d) / np.sqrt(d)
+    y_all = np.where(rng.random(total) < 0.5, 1.0, -1.0)
+    base = rng.normal(size=(total, d)).astype(np.float32)
+    proj = base @ w_star
+    base += np.outer((margin * y_all - proj) * 0.9, w_star) / (w_star @ w_star)
+    parts = dirichlet_partition(y_all, n_nodes, alpha, seed=seed)
+    feats = np.zeros((n_nodes, m, d), np.float32)
+    labels = np.zeros((n_nodes, m), np.float32)
+    for i, part in enumerate(parts):
+        take = rng.choice(part, size=m, replace=True)
+        feats[i] = base[take]
+        labels[i] = y_all[take]
+    return jnp.asarray(feats), jnp.asarray(labels)
 
 
 # ---------------------------------------------------------------------------

@@ -86,8 +86,12 @@ def stage_plan(plan) -> dict:
     """Upload a :class:`repro.core.gossip.GossipPlan`'s tensors to device
     ONCE.  The returned dict is passed unchanged to every jitted step, which
     indexes it by ``t % period`` — the whole schedule crosses the host
-    boundary a single time for the lifetime of the run."""
-    return jax.tree.map(jnp.asarray, plan.tensors())
+    boundary a single time for the lifetime of the run.  Delegates to the
+    canonical :func:`repro.core.driver.stage_plan` (one staging path for
+    the CLI, the benchmarks, and the tests)."""
+    from ..core import driver
+
+    return driver.stage_plan(plan)
 
 
 # ---------------------------------------------------------------------------

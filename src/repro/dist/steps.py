@@ -1,11 +1,17 @@
-"""Jitted distributed steps: MC-DSGT / DSGT / DSGD over a stacked node state.
+"""Jitted distributed steps over a stacked node state.
+
+This module is a thin ADAPTER: the update arithmetic for every algorithm
+(mc_dsgt / dsgt / dsgd / d2 / local_sgd / gt_local) lives once in
+:mod:`repro.core.engine`; here we only bind the engine's :class:`EngineOps`
+to the distributed substrate — the mesh/plan gossip mixers, the clipped
+R-microbatch loss/grad, and the bf16 tracker cast.
 
 ``make_train_step`` builds the three callables the drivers and tests consume:
 
 * ``init_state(key, n, dtype)`` — n identical model copies (leading node
   axis on every leaf) plus zeroed tracker state;
-* ``warm_start(state, batch)`` — Algorithm 1's initialization: tracker
-  h^0 = (1/n) sum_i g~_i^0 replicated from R accumulated oracle queries;
+* ``warm_start(state, batch)`` — the rule's tracker init (Algorithm 1's
+  h^0 = (1/n) sum_i g~_i^0 replicated for the MC-DSGT family);
 * ``step(state, batch, weights) -> (state, {"loss": ...})`` — one paper
   round.  ``batch`` leaves are (n, R, b, ...) so the R gradient-accumulation
   microbatches are Assumption 2's independent oracle draws; ``weights`` is
@@ -41,7 +47,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core import algorithms as alg
+from ..core import algorithms as alg, engine
 from . import collectives as coll
 
 PyTree = Any
@@ -81,17 +87,17 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
     ``auto_dense='pallas'`` routes runs of dense rounds through the fused
     Pallas kernel instead of the einsum scan.
     """
-    if algo not in ("mc_dsgt", "dsgt", "dsgd", "d2"):
-        raise ValueError(f"unknown algo {algo!r}")
+    rule = engine.make_rule(algo, gamma=gamma,
+                            R=(1 if algo == "d2" else R))
     if gossip_impl not in ("dense", "sun", "pallas", "auto"):
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}")
     if gossip_impl == "sun" and sun_delta is None:
         raise ValueError("gossip_impl='sun' requires sun_delta")
     if gossip_impl == "auto" and plan is None:
         raise ValueError("gossip_impl='auto' requires plan=GossipPlan")
-    if algo == "d2" and local_opt is not None:
-        raise ValueError("algo='d2' does not support local_opt (the x^{k-1} "
-                         "difference update has no local-optimizer hook)")
+    if local_opt is not None and not rule.supports_local_opt:
+        raise ValueError(f"algo={algo!r} does not support a local-optimizer "
+                         "hook")
 
     def _mc(Ws, tree):
         if gossip_impl == "sun":
@@ -163,59 +169,31 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
         return TrainState(x=x, h=aux, g_prev=aux, step=jnp.zeros((), jnp.int32),
                           opt=opt)
 
+    # Bind the engine's abstract ops to this runtime: the selected gossip
+    # mixer, the clipped R-microbatch oracle, the local-optimizer hook and
+    # the bf16 tracker cast.  The update arithmetic itself is
+    # engine.step(rule, ...) — shared verbatim with the host reference.
+    def _ops(batch, gossip, t):
+        return engine.EngineOps(
+            mix=lambda off, r, tree: _mix_rounds(gossip, t, off, r, tree),
+            grad=lambda x: _grads(x, batch),  # metrics = scalar mean loss
+            local_update=(local_opt.update if local_opt is not None
+                          else (lambda g, s: (g, s))),
+            cast_aux=lambda tree: coll.tree_cast(tree, aux_dtype))
+
+    def _to_engine(s: TrainState) -> engine.EngineState:
+        return engine.EngineState(s.x, s.h, s.g_prev, s.opt, s.step)
+
+    def _to_train(s: engine.EngineState) -> TrainState:
+        return TrainState(x=s.x, h=s.h, g_prev=s.g_prev, step=s.k, opt=s.opt)
+
     def warm_start(state: TrainState, batch) -> TrainState:
-        if algo == "dsgd":
-            return state
-        if algo == "d2":
-            # first step reduces to DSGD: x^{-1} = x^0 (held in the h slot),
-            # g^{-1} = 0 — matching repro.core.algorithms.warm_start
-            zeros = jax.tree.map(jnp.zeros_like, state.x)
-            return state._replace(h=state.x,
-                                  g_prev=coll.tree_cast(zeros, aux_dtype))
-        _, g0 = _grads(state.x, batch)
-        h0 = jax.tree.map(
-            lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True),
-                                       g.shape), g0)
-        return state._replace(h=coll.tree_cast(h0, aux_dtype),
-                              g_prev=coll.tree_cast(g0, aux_dtype))
+        ops = _ops(batch, None, 0)  # warm start never gossips
+        return _to_train(engine.warm_start(rule, _to_engine(state), ops))
 
-    def dsgd_core(state: TrainState, batch, gossip, t):
-        loss, g = _grads(state.x, batch)
-        if local_opt is not None:
-            upd, opt = local_opt.update(g, state.opt)
-        else:
-            upd, opt = g, state.opt
-        x = _mix_rounds(gossip, t, 0, R, alg._axpy(-gamma, upd, state.x))
-        return state._replace(x=x, step=state.step + 1, opt=opt), {"loss": loss}
-
-    def tracker_core(state: TrainState, batch, gossip, t):
-        if local_opt is not None:
-            d, opt = local_opt.update(state.h, state.opt)
-        else:
-            d, opt = state.h, state.opt
-        x = _mix_rounds(gossip, t, 0, R, alg._axpy(-gamma, d, state.x))
-        loss, g = _grads(x, batch)
-        delta = jax.tree.map(
-            lambda h, gi, gp: h.astype(gi.dtype) + gi - gp.astype(gi.dtype),
-            state.h, g, state.g_prev)
-        h = coll.tree_cast(_mix_rounds(gossip, t, R, R, delta), aux_dtype)
-        return TrainState(x=x, h=h, g_prev=coll.tree_cast(g, aux_dtype),
-                          step=state.step + 1, opt=opt), {"loss": loss}
-
-    def d2_core(state: TrainState, batch, gossip, t):
-        # D^2 [35]: x^{k+1} = W(2 x^k - x^{k-1} - gamma (g^k - g^{k-1}));
-        # x^{k-1} rides in the tracker (h) slot, uncast to keep the
-        # difference update exact.  Consumes ONE gossip round per step.
-        loss, g = _grads(state.x, batch)
-        z = jax.tree.map(
-            lambda xk, xm, gk, gp: 2.0 * xk - xm.astype(xk.dtype)
-            - gamma * (gk - gp.astype(gk.dtype)),
-            state.x, state.h, g, state.g_prev)
-        x = _mix_rounds(gossip, t, 0, 1, z)
-        return TrainState(x=x, h=state.x, g_prev=coll.tree_cast(g, aux_dtype),
-                          step=state.step + 1, opt=state.opt), {"loss": loss}
-
-    core = {"dsgd": dsgd_core, "d2": d2_core}.get(algo, tracker_core)
+    def core(state: TrainState, batch, gossip, t):
+        es, loss = engine.step(rule, _to_engine(state), _ops(batch, gossip, t))
+        return _to_train(es), {"loss": loss}
     if gossip_impl == "auto":
         step = core
         step.gossip_dispatch = _plan_mix.dispatch

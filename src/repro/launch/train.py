@@ -1,30 +1,36 @@
-"""End-to-end decentralized training driver.
+"""End-to-end decentralized training CLI.
 
-Runs MC-DSGT / DSGT / DSGD over a time-varying topology schedule on any
+Runs any :mod:`repro.core.engine` update rule (MC-DSGT / DSGT / DSGD / D² /
+local_sgd / gt_local) over a time-varying topology schedule on any
 registered architecture (reduced or full), with checkpointing and loss /
-consensus logging.  On the CPU container this runs the reduced configs; on
-a real TPU pod, pass --mesh production to shard over the 16x16 mesh.
+consensus logging.  The staging, window gather, restore-or-warm and loop
+all come from the unified :mod:`repro.core.driver` — this file only parses
+flags and binds the pieces.  On the CPU container this runs the reduced
+configs; on a real TPU pod, pass --mesh production to shard over the
+16x16 mesh.
 
 Example:
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
         --preset reduced --steps 50 --nodes 8 --beta 0.875 --algo mc_dsgt --R 2
+
+The paper's federated scenario (one rule, zero runtime edits):
+    PYTHONPATH=src python -m repro.launch.train --algo local_sgd \
+        --topology federated --hetero-alpha 0.1 --gossip-impl auto
 """
 
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, optim
 from repro.checkpoint import load_checkpoint, save_checkpoint
-from repro.core import gossip, topology as topo
+from repro.core import driver, engine, gossip, topology as topo
 from repro.data import token_stream_for
-from repro.dist import collectives as dcoll, steps as dsteps
+from repro.dist import steps as dsteps
 from repro.models import build
 
 
@@ -72,6 +78,9 @@ def consensus_error(x) -> float:
     return tot ** 0.5
 
 
+LOCAL_OPTS = {"sgd": None, "momentum": optim.momentum, "adam": optim.adam}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
@@ -81,7 +90,7 @@ def main(argv=None):
     ap.add_argument("--beta", type=float, default=0.75)
     ap.add_argument("--topology", default="sun", choices=TOPOLOGIES)
     ap.add_argument("--algo", default="mc_dsgt",
-                    choices=["mc_dsgt", "dsgt", "dsgd", "d2"])
+                    choices=list(engine.ALGORITHMS))
     ap.add_argument("--gossip-impl", default="dense",
                     choices=["dense", "pallas", "auto"],
                     help="multi-consensus path: GSPMD einsum (dense), the "
@@ -89,8 +98,18 @@ def main(argv=None):
                          "fallback on CPU), or per-round structured dispatch "
                          "from the gossip plan (auto: sun / matching / "
                          "complete lowerings, dense fallback)")
+    ap.add_argument("--local-opt", default="sgd",
+                    choices=sorted(LOCAL_OPTS),
+                    help="local-optimizer transform applied to the descent "
+                         "direction (repro.optim; sgd = the paper-pure "
+                         "update, no transform)")
     ap.add_argument("--er-p", type=float, default=0.5,
                     help="edge probability for --topology erdos-renyi")
+    ap.add_argument("--hetero-alpha", type=float, default=None,
+                    help="Dirichlet(alpha) data heterogeneity across nodes: "
+                         "each node draws its token distribution from a "
+                         "Dirichlet prior over the active vocab (small "
+                         "alpha = highly non-iid, the federated setting)")
     ap.add_argument("--R", type=int, default=2)
     ap.add_argument("--gamma", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=2)
@@ -112,7 +131,9 @@ def main(argv=None):
     R = args.R if args.algo == "mc_dsgt" else 1
     # gossip rounds one step consumes — and exactly how many we stage/stack
     # per step, so the consumed window matches the budget accounting
-    wps = {"dsgd": R, "d2": 1}.get(args.algo, 2 * R)
+    wps = engine.make_rule(args.algo, gamma=args.gamma, R=R).weights_per_step
+    local_opt = LOCAL_OPTS[args.local_opt]
+    local_opt = local_opt() if local_opt is not None else None
 
     # horizon only matters for the non-periodic resampled-matching schedule;
     # the x4 cushion covers --restore continuations (wrap past it is benign)
@@ -121,57 +142,50 @@ def main(argv=None):
                                  horizon=horizon, seed=args.seed,
                                  er_p=args.er_p)
     stream = token_stream_for(cfg, n, R, args.batch, args.seq, seed=args.seed,
-                              active_vocab=args.active_vocab)
+                              active_vocab=args.active_vocab,
+                              hetero_alpha=args.hetero_alpha)
     plan = sched.plan(0, sched.period) if args.gossip_impl == "auto" else None
     init_state, warm_start, train_step = dsteps.make_train_step(
         model, cfg, algo=args.algo, gamma=args.gamma, R=R,
-        gossip_impl=args.gossip_impl, plan=plan,
+        gossip_impl=args.gossip_impl, plan=plan, local_opt=local_opt,
         pallas_interpret=jax.default_backend() != "tpu")
 
     state = init_state(jax.random.key(args.seed), n, jnp.float32)
-    start_step = 0
+    state, start_step = driver.restore_or_warm(
+        state, restore=args.restore, load_fn=load_checkpoint,
+        warm=lambda s: warm_start(s, stream.batch_at(0)))
     if args.restore:
-        state, start_step = load_checkpoint(args.restore, state)
         print(f"restored step {start_step} from {args.restore}")
-    else:
-        state = warm_start(state, stream.batch_at(0))
 
     # Stage the whole period's gossip tensors on device ONCE; the jitted
     # step indexes them by (t mod period) — no per-step stacked()/transfer.
-    period = sched.period
+    staged = driver.stage(
+        sched, wps=wps, impl=("auto" if args.gossip_impl == "auto"
+                              else "dense"), plan=plan,
+        static_t=(args.gossip_impl == "auto"
+                  and train_step.gossip_dispatch == "static"))
     if args.gossip_impl == "auto":
-        gossip_dev = dcoll.stage_plan(plan)
-        static_t = train_step.gossip_dispatch == "static"
-        step_fn = (jax.jit(train_step, static_argnums=3) if static_t
-                   else jax.jit(train_step))
+        step_fn = driver.bind_step(staged, train_step)
     else:
-        gossip_dev = jnp.asarray(sched.stacked(0, period))
+        step_fn = driver.bind_step(
+            staged, lambda state, batch, W, t: train_step(state, batch, W))
 
-        def _gathered_step(state, batch, Ws_all, t):
-            idx = (t + jnp.arange(wps)) % period
-            return train_step(state, batch, jnp.take(Ws_all, idx, axis=0))
+    def record(k, t, state, out, dt):
+        loss = float(out["loss"])
+        if k % args.log_every != 0:
+            return None
+        ce = consensus_error(state.x)
+        print(f"step {k:5d}  T={t:6d}  loss {loss:.4f}  "
+              f"consensus {ce:.3e}  {dt:.2f}s")
+        return {"step": k, "loss": loss, "consensus": ce,
+                "sec": round(dt, 3)}
 
-        step_fn = jax.jit(_gathered_step)
-
-    t = start_step * wps
-    history = []
-    for k in range(start_step, start_step + args.steps):
-        batch = stream.batch_at(k + 1)
-        t0 = time.time()
-        state, metrics = step_fn(state, batch, gossip_dev, t % period)
-        loss = float(metrics["loss"])
-        dt = time.time() - t0
-        t += wps
-        if k % args.log_every == 0:
-            ce = consensus_error(state.x)
-            history.append({"step": k, "loss": loss, "consensus": ce,
-                            "sec": round(dt, 3)})
-            print(f"step {k:5d}  T={t:6d}  loss {loss:.4f}  "
-                  f"consensus {ce:.3e}  {dt:.2f}s")
-        if args.checkpoint and (k + 1) % 50 == 0:
-            save_checkpoint(args.checkpoint, state, k + 1)
+    state, history = driver.run_loop(
+        step_fn, state, steps=args.steps, wps=wps, period=staged.period,
+        start_step=start_step, extra_fn=lambda k: stream.batch_at(k + 1),
+        record=record, checkpoint=args.checkpoint,
+        save_fn=save_checkpoint)
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, state, start_step + args.steps)
         print(f"saved {args.checkpoint}")
     return history
 

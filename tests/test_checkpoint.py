@@ -1,0 +1,150 @@
+"""Checkpoint round-trip hardening.
+
+msgpack_ckpt must preserve the FULL training state bit-exactly — including
+bf16 tracker dtypes (whose numpy ``dtype.str`` is a raw void that used to
+mangle the round-trip), local-optimizer state, and the round counter — and
+``--restore`` must resume the schedule window at the correct ``t`` offset
+(a federated schedule makes any phase error visible: an empty round taken
+for the averaging round changes the trajectory).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hyp import given, settings, st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import gossip
+from repro.dist import steps as dsteps
+from repro.optim import momentum
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16, jnp.int32, jnp.int8,
+          jnp.uint32, jnp.bool_]
+
+
+def _roundtrip(tree, tmp_path, step=7):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, tree, step=step)
+    restored, k = load_checkpoint(path, tree)
+    assert k == step
+    return restored
+
+
+def _assert_bit_exact(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        assert x.shape == y.shape
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+def test_leaf_dtype_roundtrip_bit_exact(dtype, tmp_path):
+    key = jax.random.key(0)
+    if jnp.dtype(dtype).kind == "f":
+        leaf = jax.random.normal(key, (3, 5)).astype(dtype)
+    elif jnp.dtype(dtype) == jnp.bool_:
+        leaf = jax.random.normal(key, (3, 5)) > 0
+    else:
+        leaf = jax.random.randint(key, (3, 5), 0, 100).astype(dtype)
+    tree = {"a": leaf, "nested": {"b": leaf[0]}}
+    _assert_bit_exact(tree, _roundtrip(tree, tmp_path))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), dt_i=st.integers(0, len(DTYPES) - 1),
+       ndim=st.integers(0, 3))
+def test_property_any_leaf_roundtrips(seed, dt_i, ndim):
+    import pathlib
+    import tempfile
+
+    dtype = DTYPES[dt_i]
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(s) for s in rng.integers(1, 5, size=ndim))
+    raw = rng.normal(size=shape) * 10
+    leaf = jnp.asarray(raw).astype(dtype)
+    tree = {"x": leaf}
+    with tempfile.TemporaryDirectory() as td:
+        _assert_bit_exact(tree, _roundtrip(tree, pathlib.Path(td),
+                                           step=seed))
+
+
+def test_trainstate_roundtrip_bf16_tracker_and_opt_state(tmp_path):
+    """Full TrainState: bf16 h/g_prev, momentum opt_state, round counter —
+    bit-exact after one real training step."""
+    from test_engine import ToyModel, _toy_batch
+
+    model = ToyModel()
+    n = 4
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    init_s, warm, step = dsteps.make_train_step(
+        model, None, algo="dsgd", gamma=0.1, R=1,
+        aux_dtype=jnp.bfloat16, local_opt=momentum(0.9))
+    state = init_s(jax.random.key(0), n, jnp.float32)
+    state, _ = jax.jit(step)(state, _toy_batch(n, 1, 3, model.d, 1),
+                             jnp.asarray(sched.stacked(0, 1)))
+    assert jax.tree.leaves(state.h)[0].dtype == jnp.bfloat16
+    restored = _roundtrip(state, tmp_path, step=1)
+    _assert_bit_exact(state, restored)
+    assert int(restored.step) == int(state.step)
+
+
+def test_legacy_mangled_bf16_checkpoint_still_loads(tmp_path):
+    """Checkpoints written before the name-based dtype format stored bf16 as
+    the raw-void '<V2' string; loading one must resolve it back to bf16
+    (same byte layout), and genuinely unknown dtypes must raise clearly."""
+    import msgpack
+    from repro.checkpoint.msgpack_ckpt import _dtype_from_name
+
+    assert _dtype_from_name("<V2") == jnp.dtype(jnp.bfloat16)
+    with pytest.raises(ValueError):
+        _dtype_from_name("totally-unknown")
+
+    leaf = jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3)
+    arr = np.asarray(leaf)
+    path = str(tmp_path / "legacy.msgpack")
+    payload = {b"step": 3, b"treedef": b"", b"leaves": [
+        {b"dtype": arr.dtype.str.encode(),  # the legacy mangled form
+         b"shape": list(arr.shape), b"data": arr.tobytes()}]}
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload))
+    restored, k = load_checkpoint(path, {"x": leaf})
+    assert k == 3
+    _assert_bit_exact({"x": leaf}, restored)
+
+
+def test_hetero_stream_logits_computed_once():
+    """The Dirichlet node marginals are cached — batch_at must not redo the
+    host draw + device upload every step."""
+    from repro.data.synthetic import TokenStream
+
+    s = TokenStream(vocab_size=64, n_nodes=4, rounds=1, batch=1, seq=8,
+                    seed=0, active_vocab=16, hetero_alpha=0.2)
+    s.batch_at(0)
+    first = s.node_token_logits()
+    s.batch_at(1)
+    assert s.node_token_logits() is first
+
+
+def test_restore_resumes_schedule_at_correct_t_offset(tmp_path):
+    """--restore continuation == the uninterrupted run, step for step, on a
+    federated schedule where the round phase matters (period 5: four empty
+    rounds then the global average)."""
+    from repro.launch.train import main as train_main
+
+    ckpt = str(tmp_path / "resume.msgpack")
+    base = ["--arch", "qwen1.5-0.5b", "--preset", "reduced", "--nodes", "4",
+            "--batch", "1", "--seq", "16", "--algo", "local_sgd",
+            "--topology", "federated", "--gossip-impl", "auto"]
+    full = train_main(base + ["--steps", "7"])
+    _ = train_main(base + ["--steps", "4", "--checkpoint", ckpt])
+    cont = train_main(base + ["--steps", "3", "--restore", ckpt])
+    assert [h["step"] for h in cont] == [4, 5, 6]
+    # steps 4-6 cross the period-5 averaging round: any phase offset error
+    # in the restored t would diverge here
+    for h_full, h_cont in zip(full[4:], cont):
+        np.testing.assert_allclose(h_full["loss"], h_cont["loss"], rtol=1e-6)
+        np.testing.assert_allclose(h_full["consensus"], h_cont["consensus"],
+                                   rtol=1e-4, atol=1e-7)

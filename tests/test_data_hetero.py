@@ -1,0 +1,124 @@
+"""Dirichlet-heterogeneous node data partitions (the federated non-iid
+protocol) — token-stream marginals and labelled-pool partitions."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hyp import given, settings, st
+
+from repro import configs
+from repro.data import (dirichlet_partition, logreg_dataset_dirichlet,
+                        token_stream_for)
+from repro.data.synthetic import TokenStream
+
+
+# ---------------------------------------------------------------------------
+# dirichlet_partition
+# ---------------------------------------------------------------------------
+
+def test_partition_is_exact_and_deterministic():
+    labels = np.repeat([0, 1, 2], 60)
+    p1 = dirichlet_partition(labels, 8, alpha=0.3, seed=4)
+    p2 = dirichlet_partition(labels, 8, alpha=0.3, seed=4)
+    allidx = np.concatenate(p1)
+    assert sorted(allidx.tolist()) == list(range(len(labels)))  # exact cover
+    assert all(len(p) > 0 for p in p1)                          # no empties
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)                     # seeded
+
+
+def test_small_alpha_concentrates_large_alpha_balances():
+    labels = np.repeat([0, 1, 2, 3], 250)
+    n = 8
+
+    def mean_top_frac(alpha):
+        parts = dirichlet_partition(labels, n, alpha, seed=0)
+        fracs = []
+        for p in parts:
+            counts = np.bincount(labels[p], minlength=4)
+            fracs.append(counts.max() / max(counts.sum(), 1))
+        return float(np.mean(fracs))
+
+    skewed, balanced = mean_top_frac(0.05), mean_top_frac(100.0)
+    assert skewed > 0.75, skewed       # near-single-class nodes
+    assert balanced < 0.40, balanced   # ~0.25 at iid
+    assert skewed > balanced + 0.25
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 200), n_nodes=st.integers(2, 12),
+       alpha=st.floats(0.05, 10.0))
+def test_property_partition_always_exact_cover(seed, n_nodes, alpha):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, size=200)
+    parts = dirichlet_partition(labels, n_nodes, alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 200
+    assert len(np.unique(allidx)) == 200
+    assert all(len(p) > 0 for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# TokenStream hetero_alpha
+# ---------------------------------------------------------------------------
+
+def _stream(alpha, n=4, vocab=32, seed=0):
+    return TokenStream(vocab_size=1024, n_nodes=n, rounds=2, batch=2, seq=64,
+                       seed=seed, active_vocab=vocab, hetero_alpha=alpha)
+
+
+def test_hetero_stream_shapes_and_range():
+    s = _stream(0.1)
+    b = s.batch_at(3)
+    assert b["tokens"].shape == (4, 2, 2, 64)
+    assert b["tokens"].dtype == jnp.int32
+    toks = np.asarray(b["tokens"])
+    assert toks.min() >= 0 and toks.max() < 32
+    np.testing.assert_array_equal(toks, np.asarray(s.batch_at(3)["tokens"]))
+
+
+def test_hetero_stream_matches_node_marginals():
+    """Each node's empirical token distribution follows ITS Dirichlet draw:
+    nodes differ from each other at small alpha, and each node's samples
+    are closer to its own marginal than to the other nodes'."""
+    s = _stream(0.1, n=4, vocab=16)
+    probs = np.exp(np.asarray(s.node_token_logits()))
+    counts = np.zeros((4, 16))
+    for step in range(8):
+        toks = np.asarray(s.batch_at(step)["tokens"])
+        for i in range(4):
+            counts[i] += np.bincount(toks[i].ravel(), minlength=16)
+    emp = counts / counts.sum(axis=1, keepdims=True)
+    for i in range(4):
+        dists = [np.abs(emp[i] - probs[j]).sum() for j in range(4)]
+        assert int(np.argmin(dists)) == i, (i, dists)
+    # small alpha => node marginals genuinely differ
+    assert max(np.abs(emp[0] - emp[j]).sum() for j in range(1, 4)) > 0.5
+
+
+def test_iid_stream_unchanged_without_alpha():
+    """hetero_alpha=None keeps the original uniform stream bit-for-bit (the
+    default path must not shift any seeded trajectory)."""
+    cfg = configs.get("qwen1.5-0.5b").reduced()
+    a = token_stream_for(cfg, 4, 2, 2, 32, seed=0, active_vocab=16)
+    b = token_stream_for(cfg, 4, 2, 2, 32, seed=0, active_vocab=16,
+                         hetero_alpha=None)
+    np.testing.assert_array_equal(np.asarray(a.batch_at(5)["tokens"]),
+                                  np.asarray(b.batch_at(5)["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# logreg_dataset_dirichlet
+# ---------------------------------------------------------------------------
+
+def test_logreg_dirichlet_shapes_and_skew():
+    n, m, d = 8, 64, 16
+    H, y = logreg_dataset_dirichlet(n, m, d, alpha=0.05, seed=0)
+    assert H.shape == (n, m, d) and y.shape == (n, m)
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+    # label skew per node: small alpha pushes nodes toward one class
+    pos_frac = np.asarray((y > 0).mean(axis=1))
+    assert np.mean(np.maximum(pos_frac, 1 - pos_frac)) > 0.8
+    Hb, yb = logreg_dataset_dirichlet(n, m, d, alpha=100.0, seed=0)
+    pos_b = np.asarray((yb > 0).mean(axis=1))
+    assert np.mean(np.maximum(pos_b, 1 - pos_b)) < 0.65
