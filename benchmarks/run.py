@@ -18,6 +18,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
       derived = max |kernel - oracle|.
   engine_step_*      — throughput of the engine-built distributed step,
       one row per update rule; also writes BENCH_engine.json.
+  sim_*              — repro.sim wireless data path: mobility schedule
+      resampling, channel degradation + weight repair, and gossip-plan
+      restaging of the realized window; writes BENCH_sim.json.
   roofline_summary   — reads experiments/dryrun/*.json if present.
       derived = #pairs whose dominant term is compute/memory/collective.
 
@@ -310,6 +313,65 @@ def bench_gossip_plan(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# repro.sim: mobility resampling, fault realization, plan restaging
+# ---------------------------------------------------------------------------
+
+def bench_sim(quick: bool) -> None:
+    """Throughput of the wireless-simulation data path, per stage: mobility
+    schedule resampling (unit-disk adjacency rounds), channel+repair
+    realization (ideal W -> masked -> repaired), and plan restaging
+    (WeightSchedule.plan + stage_plan of the realized window).  derived =
+    rounds/s (and the realized plan's kind counts for the restage row).
+    Also writes experiments/bench/BENCH_sim.json — a CI artifact."""
+    from repro.core import gossip
+    from repro.dist.collectives import stage_plan
+    from repro.sim import (BernoulliDropChannel, GilbertElliottChannel,
+                           random_geometric_schedule,
+                           random_waypoint_schedule, realize_weight_schedule)
+
+    n = 16
+    rounds = 64 if quick else 256
+    rows = []
+
+    def row(name, us, derived):
+        record(name, us, derived)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+    for tag, sched in [("geometric", random_geometric_schedule(n, seed=0)),
+                       ("waypoint", random_waypoint_schedule(n, seed=0))]:
+        t0 = time.time()
+        for t in range(rounds):
+            sched(t)
+        us = (time.time() - t0) * 1e6 / rounds
+        row(f"sim_resample_{tag}", us, f"rounds_per_s={1e6 / us:.0f}")
+
+    ideal = gossip.schedule_from_topology(
+        random_waypoint_schedule(n, seed=0), horizon=rounds)
+    models = [BernoulliDropChannel(0.2, seed=1),
+              GilbertElliottChannel(0.1, seed=2)]
+    t0 = time.time()
+    realized = realize_weight_schedule(ideal, models, rounds=rounds)
+    us = (time.time() - t0) * 1e6 / rounds
+    row("sim_realize_channel_repair", us, f"rounds_per_s={1e6 / us:.0f}")
+
+    t0 = time.time()
+    plan = realized.plan(0, rounds)
+    tensors = stage_plan(plan)
+    jax.block_until_ready(tensors)
+    us = (time.time() - t0) * 1e6 / rounds
+    kinds = "+".join(f"{plan.kinds.count(k)}x{k}"
+                     for k in dict.fromkeys(plan.kinds))
+    row("sim_plan_restage", us,
+        f"rounds_per_s={1e6 / us:.0f}|kinds={kinds}")
+
+    os.makedirs("experiments/bench", exist_ok=True)
+    with open("experiments/bench/BENCH_sim.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print("wrote experiments/bench/BENCH_sim.json", file=sys.stderr)
+
+
+# ---------------------------------------------------------------------------
 # Engine step throughput (one row per update rule)
 # ---------------------------------------------------------------------------
 
@@ -375,6 +437,7 @@ def bench_roofline(quick: bool) -> None:
 BENCHES = [
     ("theorem3", bench_theorem3),
     ("gossip_plan", bench_gossip_plan),
+    ("sim", bench_sim),
     ("engine_step", bench_engine_step),
     ("kernels", bench_kernels),
     ("theorem4", bench_theorem4),

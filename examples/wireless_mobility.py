@@ -1,0 +1,95 @@
+"""Wireless mobility + lossy channels: the paper's motivating scenario.
+
+"Decentralized algorithms are more robust in wireless scenarios especially
+when nodes are moving" — this example builds that scenario with
+`repro.sim`: 16 nodes move through the unit square (random-waypoint
+mobility, unit-disk links), the channel drops an increasing fraction of
+links per round (iid Bernoulli), the surviving links are repaired into a
+valid mixing matrix, and MC-DSGT / DSGD / gt_local run over the *realized*
+schedule while the telemetry recorder measures what the faults did to
+mixing (windowed spectral gap, empirical effective diameter of the
+realized rounds, consensus distance).
+
+    PYTHONPATH=src python examples/wireless_mobility.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg, gossip
+from repro.data import logreg_dataset_dirichlet, logreg_loss_and_grad
+from repro.sim import (BernoulliDropChannel, TelemetryRecorder,
+                       random_waypoint_schedule, realize_weight_schedule)
+
+
+def median(vals):
+    vals = [v for v in vals if v is not None]
+    return float(np.median(vals)) if vals else None
+
+
+def main():
+    n, d, m = 16, 64, 256
+    T = 320                    # gossip/oracle budget per run
+    R = 2                      # MC-DSGT consensus/accumulation rounds
+    radius = 0.45
+
+    H, y = logreg_dataset_dirichlet(n, m, d, alpha=0.3, seed=0)
+    _, _, stoch, _, gnorm2 = logreg_loss_and_grad(rho=0.1)
+    x0 = jnp.zeros((n, d))
+
+    def grad_fn(xs, key):
+        return stoch(xs, H, y, key, 16)
+
+    def eval_fn(xb):
+        return gnorm2(xb, H, y)
+
+    mobility = random_waypoint_schedule(n, radius=radius, seed=0)
+    ideal = gossip.schedule_from_topology(mobility, horizon=T + 8)
+
+    algos = [
+        ("mc_dsgt", lambda: alg.mc_dsgt(0.3, R=R)),
+        ("gt_local", lambda: alg.gt_local(0.2)),
+        ("dsgd", lambda: alg.dsgd(0.3)),
+    ]
+    print(f"n={n}  random-waypoint mobility (radius={radius})  "
+          f"non-iid Dirichlet(0.3) data  budget T={T}")
+    print(f"{'algo':9s} {'drop':>5s} {'||grad f(x_bar)||^2':>20s} "
+          f"{'consensus':>10s} {'gap~':>7s} {'eff_diam~':>9s} "
+          f"{'dropped rounds':>14s}")
+    final = {}
+    for drop in (0.0, 0.2, 0.4):
+        sched = ideal if drop == 0.0 else realize_weight_schedule(
+            ideal, [BernoulliDropChannel(drop, seed=7)], rounds=T + 8)
+        for name, mk in algos:
+            algo = mk()
+            steps = max(2, T // algo.weights_per_step)
+            telem = TelemetryRecorder(sched, wps=algo.weights_per_step)
+            _, hist = alg.run(algo, x0, grad_fn, sched, steps,
+                              jax.random.key(0), eval_fn=eval_fn,
+                              eval_every=max(1, steps - 1),
+                              telemetry=telem)
+            g = float(hist[-1][1])
+            gap = median([e["spectral_gap"] for e in telem.history])
+            diam = median([e["eff_diameter"] for e in telem.history])
+            empty = sum(e["kinds"].get("empty", 0) for e in telem.history[-1:])
+            last = telem.history[-1]
+            print(f"{name:9s} {drop:5.1f} {g:20.6f} "
+                  f"{last['consensus']:10.4f} {gap:7.3f} "
+                  f"{diam if diam is not None else float('nan'):9.1f} "
+                  f"{empty:8d}/{last['window'][1] - last['window'][0]} "
+                  f"(last window)")
+            final[(name, drop)] = g
+
+    print("\nGradient tracking survives the lossy channel: at 20% and 40% "
+          "link drop the tracked runs (mc_dsgt, gt_local) keep converging "
+          "while plain DSGD pays the full heterogeneity bias; the realized "
+          "effective diameter and spectral gap quantify exactly how much "
+          "mixing the channel destroyed.")
+    assert final[("mc_dsgt", 0.4)] < final[("mc_dsgt", 0.0)] * 50, \
+        "MC-DSGT should degrade gracefully under 40% loss"
+    return final
+
+
+if __name__ == "__main__":
+    main()

@@ -297,6 +297,7 @@ class DecentralizedAlgorithm:
     step: Callable[[AlgoState, GradFn, jax.Array, jax.Array], AlgoState]
     warm: Callable[[AlgoState, GradFn, jax.Array], AlgoState] = None
     rule: "engine.UpdateRule" = None
+    local_opt: Any = None
 
 
 def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm:
@@ -337,7 +338,42 @@ def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm
                                           _ops(grad_fn, None, key)))
 
     return DecentralizedAlgorithm(rule.name, rule.weights_per_step, init,
-                                  step, warm, rule)
+                                  step, warm, rule, local_opt)
+
+
+def plan_step(algo: DecentralizedAlgorithm, plan, *, mesh=None,
+              axis: str = "data"):
+    """Bind ``algo``'s update rule to a staged :class:`repro.core.gossip.
+    GossipPlan` — the host-runtime analogue of ``dist.steps``'
+    ``gossip_impl='auto'``.  Returns ``step(state, grad_fn, tensors, t,
+    key)`` where ``tensors`` is the plan staged on device once
+    (:func:`repro.core.driver.stage_plan`) and ``t`` the start round
+    (concrete at trace time when ``step.dispatch == 'static'``).  Realized
+    post-fault schedules (:mod:`repro.sim`) ride this path too: degraded
+    matchings take the one-peer lowering and fully dropped (``empty``)
+    rounds cost nothing."""
+    rule = algo.rule
+    if rule is None:
+        raise ValueError("plan_step requires an engine-rule algorithm "
+                         "(built via from_rule)")
+    mixer = make_plan_mixer(plan, mesh=mesh, axis=axis)
+    local_update = (algo.local_opt.update if algo.local_opt is not None
+                    else (lambda g, s: (g, s)))
+
+    def pstep(state: AlgoState, grad_fn: GradFn, tensors, t,
+              key: jax.Array) -> AlgoState:
+        ops = engine.EngineOps(
+            mix=lambda off, r, tree: mixer(tensors, t + off, r, tree),
+            grad=lambda x: (None, engine._accumulate(grad_fn, x, key,
+                                                     rule.R)),
+            local_update=local_update,
+            cast_aux=lambda tree: tree)
+        es, _ = engine.step(rule, engine.EngineState(
+            state.x, state.h, state.g_prev, state.opt_state, state.k), ops)
+        return AlgoState(es.x, es.h, es.g_prev, es.opt, es.k)
+
+    pstep.dispatch = mixer.dispatch
+    return pstep
 
 
 # -- The paper's rules + the federated/local-update family, one line each. --
@@ -397,7 +433,7 @@ def warm_start(algo: DecentralizedAlgorithm, state: AlgoState,
 def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
         weight_schedule, num_steps: int, key: jax.Array,
         eval_fn: Optional[Callable[[PyTree], Any]] = None,
-        eval_every: int = 1):
+        eval_every: int = 1, gossip_impl: str = "dense", telemetry=None):
     """Host-side training loop over a :class:`repro.core.gossip.WeightSchedule`.
 
     The schedule is staged on device ONCE up front — one period (or, for
@@ -414,4 +450,5 @@ def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
     """
     return driver.run_algorithm(algo, x0, grad_fn, weight_schedule,
                                 num_steps, key, eval_fn=eval_fn,
-                                eval_every=eval_every)
+                                eval_every=eval_every,
+                                gossip_impl=gossip_impl, telemetry=telemetry)

@@ -156,9 +156,18 @@ def run_loop(step, state, *, steps: int, wps: int, period: int,
 # ---------------------------------------------------------------------------
 
 def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
-                  key: jax.Array, eval_fn=None, eval_every: int = 1):
+                  key: jax.Array, eval_fn=None, eval_every: int = 1,
+                  gossip_impl: str = "dense", plan=None, telemetry=None):
     """Drive a host :class:`repro.core.algorithms.DecentralizedAlgorithm`
     over a :class:`repro.core.gossip.WeightSchedule`.
+
+    ``gossip_impl='dense'`` stages one window of dense matrices;
+    ``'auto'`` lowers the schedule through ``weight_schedule.plan`` and
+    mixes via :func:`repro.core.algorithms.plan_step` — the same per-round
+    structured dispatch the distributed runtime uses (``plan`` overrides
+    the default one-period plan).  ``telemetry`` is an optional
+    :class:`repro.sim.telemetry.TelemetryRecorder` (or any object with the
+    ``record(k, t, state, out, dt)`` hook signature) invoked every step.
 
     Returns (final_state, history) where history records ``eval_fn`` of the
     node-mean model x̄ every ``eval_every`` steps (plus the final step),
@@ -170,10 +179,21 @@ def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
     state = algo.warm(state, grad_fn, k0)
     wps = algo.weights_per_step
     total = max(1, num_steps * wps)
-    staged = stage(weight_schedule, wps=wps, total=total)
+    if gossip_impl == "auto":
+        from . import algorithms as alg  # deferred: algorithms imports driver
+        if plan is None:
+            plan = weight_schedule.plan(0, weight_schedule.period)
+        pstep = alg.plan_step(algo, plan)
+        staged = stage(weight_schedule, wps=wps, impl="auto", plan=plan,
+                       static_t=(pstep.dispatch == "static"))
 
-    def core(state, sub, weights, t):
-        return algo.step(state, grad_fn, weights, sub), None
+        def core(state, sub, tensors, t):
+            return pstep(state, grad_fn, tensors, t, sub), None
+    else:
+        staged = stage(weight_schedule, wps=wps, total=total)
+
+        def core(state, sub, weights, t):
+            return algo.step(state, grad_fn, weights, sub), None
 
     step = bind_step(staged, core)
 
@@ -183,6 +203,8 @@ def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
         return sub
 
     def record(k, t, state, out, dt):
+        if telemetry is not None:
+            telemetry.record(k, t, state, out, dt)
         if eval_fn is None:
             return None
         if k % eval_every == 0 or k == num_steps - 1:

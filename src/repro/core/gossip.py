@@ -170,7 +170,10 @@ def plan_round(W: WeightMatrix,
         rd = _accept(GossipRound("complete", W, avg_weight=a))
     elif structure.kind == "matching":
         perm = np.asarray(structure.perm, np.int32)
-        w = W[np.arange(n), perm].astype(np.float32)
+        idx = np.arange(n)
+        # fixed points (unmatched nodes of a partial matching) exchange
+        # nothing: their peer weight is 0, not the diagonal entry
+        w = np.where(perm == idx, 0.0, W[idx, perm]).astype(np.float32)
         rd = _accept(GossipRound("matching", W, perm=perm, w_peer=w))
     elif structure.kind == "sun":
         center = np.asarray(structure.center, int)

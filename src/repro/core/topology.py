@@ -102,8 +102,11 @@ class RoundStructure:
 
     * ``empty``     — self-loops only: no communication at all;
     * ``complete``  — K_n: one all-reduce of the node mean;
-    * ``matching``  — perfect matching (``perm`` is the peer involution):
-                      one point-to-point exchange, O(V) on the wire;
+    * ``matching``  — (possibly partial) matching (``perm`` is the peer
+                      involution, fixing unmatched nodes): one point-to-point
+                      exchange, O(V) on the wire.  Partial matchings arise
+                      when a channel fault drops pairs out of a perfect
+                      matching (:mod:`repro.sim.channel`);
     * ``sun``       — S_{n,C} (``center`` is C): two node-axis all-reduces,
                       O(2V) on the wire;
     * ``dense``     — anything else: the generic einsum / all-gather path.
@@ -129,8 +132,11 @@ def classify_adjacency(adj: Adjacency) -> RoundStructure:
         return RoundStructure("empty")
     if (deg == n - 1).all():
         return RoundStructure("complete")
-    if (deg == 1).all():
-        perm = off.argmax(axis=1)
+    if (deg <= 1).all():
+        # perfect OR partial matching: unmatched (degree-0) nodes are fixed
+        # points of the involution, so a fault-degraded matching still
+        # lowers to the one-peer exchange
+        perm = np.where(deg == 1, off.argmax(axis=1), np.arange(n))
         if np.array_equal(perm[perm], np.arange(n)):
             return RoundStructure("matching", perm=tuple(int(p) for p in perm))
     center = np.flatnonzero(deg == n - 1)
@@ -362,7 +368,49 @@ def effective_distance(schedule, set_a: Sequence[int], set_b: Sequence[int],
     return best
 
 
+def _all_pairs_first_reach(schedule: Schedule, t0: int,
+                           max_rounds: int) -> np.ndarray:
+    """``first[i, j]`` = rounds until j enters the neighborhood closure of
+    {i}, communicating over G^{t0}, G^{t0+1}, ... (``max_rounds + 1`` when it
+    never does) — every source propagated at once as one boolean frontier
+    matrix per round, instead of n independent single-source scans."""
+    n = schedule(t0).shape[0]
+    reach = np.eye(n, dtype=bool)
+    first = np.where(reach, 0, max_rounds + 1)
+    for r in range(1, max_rounds + 1):
+        if reach.all():
+            break
+        adj = schedule(t0 + r - 1)
+        # closure step for every source s at once:
+        # reach'[s, i] = reach[s, i] OR any_j (adj[i, j] AND reach[s, j])
+        new = reach | ((reach.astype(np.int32) @ adj.T.astype(np.int32)) > 0)
+        first[new & ~reach] = r
+        reach = new
+    return first
+
+
 def effective_diameter(schedule, period: int | None = None) -> int:
+    """max over node pairs of the Definition 2 effective distance — one
+    all-pairs frontier propagation per start round (exactly equal to the
+    pairwise :func:`effective_distance` scan it replaces; pinned by tests
+    on the Theorem 3 schedules)."""
+    n = schedule(0).shape[0]
+    if n <= 1:
+        return 0
+    p = period if period is not None else getattr(schedule, "period", 1)
+    if p is None:
+        raise ValueError("non-periodic schedule requires period=<rounds>")
+    cap = n * p + n + 1
+    best = np.full((n, n), cap + 1, dtype=np.int64)
+    for t0 in range(p):
+        first = _all_pairs_first_reach(schedule, t0, cap)
+        np.minimum(best, np.maximum(first, first.T), out=best)
+    return int(best[~np.eye(n, dtype=bool)].max())
+
+
+def _effective_diameter_pairwise(schedule, period: int | None = None) -> int:
+    """Reference implementation (O(n^2) single-source scans) kept for the
+    equality pin in tests."""
     n = schedule(0).shape[0]
     diam = 0
     for i in range(n):

@@ -16,6 +16,10 @@ Example:
 The paper's federated scenario (one rule, zero runtime edits):
     PYTHONPATH=src python -m repro.launch.train --algo local_sgd \
         --topology federated --hetero-alpha 0.1 --gossip-impl auto
+
+The wireless scenario (repro.sim): moving nodes, lossy channel, telemetry:
+    PYTHONPATH=src python -m repro.launch.train --topology geometric-mobility \
+        --nodes 16 --link-drop 0.2 --gossip-impl auto --telemetry telem.json
 """
 
 from __future__ import annotations
@@ -32,16 +36,20 @@ from repro.core import driver, engine, gossip, topology as topo
 from repro.data import token_stream_for
 from repro.dist import steps as dsteps
 from repro.models import build
+from repro.sim import channel as sim_channel, faults as sim_faults, \
+    mobility as sim_mobility, telemetry as sim_telemetry
 
 
 def make_weight_schedule(kind: str, n: int, beta: float, *,
                          horizon: int | None = None, seed: int = 0,
-                         er_p: float = 0.5) -> gossip.WeightSchedule:
+                         er_p: float = 0.5,
+                         radius: float = 0.45) -> gossip.WeightSchedule:
     """Build the weight schedule for one named topology scenario.
 
-    ``horizon`` (total gossip rounds the run will consume) is required only
-    by the non-periodic ``resampled-matching`` schedule; ``er_p`` is the
-    Erdős–Rényi edge probability."""
+    ``horizon`` (total gossip rounds the run will consume) is required by
+    the non-periodic schedules (``resampled-matching`` and the mobility
+    models); ``er_p`` is the Erdős–Rényi edge probability; ``radius`` the
+    unit-disk communication range of the mobility models."""
     if kind == "sun":
         return gossip.theorem3_weight_schedule(n, beta)
     if kind == "one-peer-exp":
@@ -61,21 +69,44 @@ def make_weight_schedule(kind: str, n: int, beta: float, *,
     if kind == "erdos-renyi":
         return gossip.schedule_from_topology(
             topo.erdos_renyi_schedule(n, er_p, seed=seed))
+    if kind == "geometric-mobility":
+        return gossip.schedule_from_topology(
+            sim_mobility.random_geometric_schedule(n, radius, seed=seed),
+            horizon=horizon)
+    if kind == "waypoint-mobility":
+        return gossip.schedule_from_topology(
+            sim_mobility.random_waypoint_schedule(n, radius, seed=seed),
+            horizon=horizon)
     if kind == "complete":
         return gossip.WeightSchedule((np.ones((n, n)) / n,))
     raise ValueError(kind)
 
 TOPOLOGIES = ["sun", "ring", "one-peer-exp", "static-exp", "federated",
               "complete", "random-matching", "resampled-matching",
-              "erdos-renyi"]
+              "erdos-renyi", "geometric-mobility", "waypoint-mobility"]
 
 
 def consensus_error(x) -> float:
-    tot = 0.0
-    for leaf in jax.tree.leaves(x):
-        xb = jnp.mean(leaf, axis=0, keepdims=True)
-        tot += float(jnp.sum((leaf - xb) ** 2))
-    return tot ** 0.5
+    return sim_telemetry.consensus_distance(x)
+
+
+def make_fault_models(args) -> list:
+    """Channel/fault models from the CLI degradation flags (empty when the
+    channel is ideal).  Seeds are offset per stream so --seed moves every
+    stream together without correlating them."""
+    models = []
+    if args.link_drop > 0:
+        models.append(sim_channel.BernoulliDropChannel(
+            args.link_drop, seed=args.seed + 101))
+    if args.burst_loss > 0:
+        models.append(sim_channel.GilbertElliottChannel(
+            args.burst_loss, seed=args.seed + 202))
+    if args.churn > 0:
+        models.append(sim_faults.NodeChurn(args.churn, seed=args.seed + 303))
+    if args.straggler > 0:
+        models.append(sim_faults.StragglerInjection(
+            args.straggler, seed=args.seed + 404))
+    return models
 
 
 LOCAL_OPTS = {"sgd": None, "momentum": optim.momentum, "adam": optim.adam}
@@ -105,6 +136,27 @@ def main(argv=None):
                          "update, no transform)")
     ap.add_argument("--er-p", type=float, default=0.5,
                     help="edge probability for --topology erdos-renyi")
+    ap.add_argument("--radius", type=float, default=0.45,
+                    help="unit-disk communication range for the mobility "
+                         "topologies (geometric-mobility, waypoint-mobility)")
+    ap.add_argument("--link-drop", type=float, default=0.0,
+                    help="iid per-round per-link Bernoulli drop probability "
+                         "(repro.sim channel degradation)")
+    ap.add_argument("--burst-loss", type=float, default=0.0,
+                    help="Gilbert-Elliott bursty loss: per-round good->bad "
+                         "transition probability (bad links drop their "
+                         "round; recovery 0.25/round)")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="per-round node failure probability (a down node "
+                         "loses all links; recovery 0.3/round)")
+    ap.add_argument("--straggler", type=float, default=0.0,
+                    help="per-round per-node straggler probability (a "
+                         "straggler's links miss the round deadline and "
+                         "are dropped)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the repro.sim mixing-telemetry JSON history "
+                         "(consensus distance, windowed spectral gap, "
+                         "realized effective diameter) to PATH")
     ap.add_argument("--hetero-alpha", type=float, default=None,
                     help="Dirichlet(alpha) data heterogeneity across nodes: "
                          "each node draws its token distribution from a "
@@ -135,12 +187,28 @@ def main(argv=None):
     local_opt = LOCAL_OPTS[args.local_opt]
     local_opt = local_opt() if local_opt is not None else None
 
-    # horizon only matters for the non-periodic resampled-matching schedule;
-    # the x4 cushion covers --restore continuations (wrap past it is benign)
+    # horizon only matters for the non-periodic schedules (resampled
+    # matching, mobility) and realized fault windows; the x4 cushion covers
+    # --restore continuations (wrap past it is benign)
     horizon = (args.steps + 1) * wps * 4
     sched = make_weight_schedule(args.topology, n, args.beta,
                                  horizon=horizon, seed=args.seed,
-                                 er_p=args.er_p)
+                                 er_p=args.er_p, radius=args.radius)
+    fault_models = make_fault_models(args)
+    if fault_models:
+        # ideal plan -> channel degradation -> repair -> (re-)lowering:
+        # the realized window replaces the schedule wholesale, so both
+        # gossip impls (dense staging AND the structured plan path below)
+        # consume the same post-fault matrices
+        sched = sim_faults.realize_weight_schedule(sched, fault_models,
+                                                   rounds=horizon)
+    telem = None
+    if fault_models or args.telemetry or \
+            args.topology in ("geometric-mobility", "waypoint-mobility"):
+        # record only on log steps: the windowed metrics are host-side
+        # numpy over (window, n, n) matrices, cheap but not free per step
+        telem = sim_telemetry.TelemetryRecorder(sched, wps=wps,
+                                                every=args.log_every)
     stream = token_stream_for(cfg, n, R, args.batch, args.seq, seed=args.seed,
                               active_vocab=args.active_vocab,
                               hetero_alpha=args.hetero_alpha)
@@ -172,11 +240,18 @@ def main(argv=None):
 
     def record(k, t, state, out, dt):
         loss = float(out["loss"])
+        tl = telem.record(k, t, state, out, dt) if telem is not None else None
         if k % args.log_every != 0:
             return None
-        ce = consensus_error(state.x)
+        ce = tl["consensus"] if tl is not None else consensus_error(state.x)
+        extra = ""
+        if tl is not None:
+            ed = tl["eff_diameter"]
+            gap = tl["spectral_gap"]
+            extra = (f"  gap {gap if gap is not None else float('nan'):.3f}"
+                     f"  eff_diam {ed if ed is not None else '-'}")
         print(f"step {k:5d}  T={t:6d}  loss {loss:.4f}  "
-              f"consensus {ce:.3e}  {dt:.2f}s")
+              f"consensus {ce:.3e}{extra}  {dt:.2f}s")
         return {"step": k, "loss": loss, "consensus": ce,
                 "sec": round(dt, 3)}
 
@@ -187,6 +262,9 @@ def main(argv=None):
         save_fn=save_checkpoint)
     if args.checkpoint:
         print(f"saved {args.checkpoint}")
+    if args.telemetry and telem is not None:
+        telem.dump(args.telemetry)
+        print(f"wrote telemetry {args.telemetry}")
     return history
 
 

@@ -1,0 +1,35 @@
+"""repro.sim — network dynamics, channel faults, and mixing telemetry.
+
+The scenario engine the paper's premise calls for: generate physically
+motivated time-varying networks (wireless mobility), degrade them with
+lossy/bursty channels, node churn and stragglers, repair the surviving
+links into valid mixing matrices, and measure online what the realized
+schedule does to consensus (see README "channel → repair → lowering").
+"""
+
+from .channel import (  # noqa: F401
+    BernoulliDropChannel,
+    GilbertElliottChannel,
+    LinkLatencyModel,
+)
+from .faults import (  # noqa: F401
+    NodeChurn,
+    StragglerInjection,
+    combined_mask,
+    realize_weight_schedule,
+    repair_weights,
+)
+from .mobility import (  # noqa: F401
+    RandomGeometricSchedule,
+    RandomWaypointSchedule,
+    random_geometric_schedule,
+    random_waypoint_schedule,
+    unit_disk_adjacency,
+)
+from .telemetry import (  # noqa: F401
+    TELEMETRY_FIELDS,
+    TelemetryRecorder,
+    consensus_distance,
+    empirical_effective_diameter,
+    windowed_spectral_gap,
+)

@@ -1,0 +1,155 @@
+"""Online mixing telemetry over the *realized* (post-fault) schedule.
+
+A :class:`TelemetryRecorder` plugs into the unified driver loop as (part
+of) the ``record`` hook (:func:`repro.core.driver.run_loop` /
+``run_algorithm(telemetry=...)`` / ``launch/train.py``) and measures, per
+step, what the lossy channel actually did to mixing:
+
+* ``consensus``      — consensus distance ||x - x̄||_F of the stacked
+                       iterate (how far the node copies have drifted);
+* ``spectral_gap``   — 1 - ||Π_r W^r - 11ᵀ/n||₂ over the trailing window
+                       of realized matrices (the empirical multi-round
+                       contraction; 0 means the realized window does not
+                       mix at all);
+* ``eff_diameter``   — empirical effective diameter (paper Definition 2)
+                       of the realized window's adjacency, via the
+                       vectorized all-pairs frontier propagation in
+                       :func:`repro.core.topology.effective_diameter`;
+                       ``None``/null when the window never connects;
+* ``kinds``          — realized plan-kind counts in the window (``empty``
+                       = fully dropped rounds, ``matching`` = surviving
+                       (possibly partial) matchings, ...).
+
+``dump(path)`` writes the JSON history together with this field reference.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import gossip, topology as topo
+
+TELEMETRY_FIELDS = {
+    "step": "driver step index k",
+    "t": "total gossip rounds (budget T) consumed after this step",
+    "loss": "runtime loss metric when the step reports one, else null",
+    "consensus": "consensus distance ||x - x_bar||_F of the stacked iterate",
+    "window": "[lo, hi) realized rounds the windowed metrics below cover",
+    "spectral_gap": "1 - ||prod_{r in window} W^r - 11^T/n||_2 (empirical "
+                    "multi-round mixing contraction of the realized window)",
+    "eff_diameter": "empirical effective diameter (Definition 2) of the "
+                    "realized window's adjacency; null when the window "
+                    "never connects",
+    "kinds": "realized gossip-plan round kinds in the window, counted "
+             "(empty = fully dropped rounds)",
+    "sec": "wall-clock seconds this step took",
+}
+
+
+def consensus_distance(x: Any) -> float:
+    """||x - x̄||_F over every leaf of a stacked pytree (node axis 0).
+    Reduces on device — only one scalar per leaf crosses the host
+    boundary, so it is safe to call on full model states."""
+    tot = 0.0
+    for leaf in jax.tree.leaves(x):
+        arr = jnp.asarray(leaf)
+        xb = jnp.mean(arr, axis=0, keepdims=True)
+        tot += float(jnp.sum((arr - xb) ** 2))
+    return tot ** 0.5
+
+
+def windowed_spectral_gap(mats: np.ndarray) -> float:
+    """1 - beta of the window product: the contraction a state actually
+    experienced mixing through ``mats`` (R, n, n) in order."""
+    P = np.eye(mats.shape[1])
+    for W in mats:
+        P = W @ P
+    return 1.0 - gossip.mixing_beta(P)
+
+
+def window_adjacency(mats: np.ndarray, tol: float = 1e-12) -> np.ndarray:
+    """(R, n, n) bool adjacency of a realized matrix window."""
+    adj = np.abs(mats) > tol
+    adj |= np.eye(mats.shape[1], dtype=bool)[None]
+    return adj
+
+
+def empirical_effective_diameter(adjs: np.ndarray) -> Optional[int]:
+    """Definition 2 effective diameter of the realized window, treated as
+    one period; ``None`` when some pair never meets within the cap (the
+    window does not connect the network)."""
+    adjs = np.asarray(adjs, bool)
+    R, n = adjs.shape[0], adjs.shape[1]
+    if n <= 1:
+        return 0
+    sched = topo.PeriodicSchedule(tuple(adjs))
+    d = topo.effective_diameter(sched, period=R)
+    cap = n * R + n + 1
+    return None if d > cap else d
+
+
+class TelemetryRecorder:
+    """Collects per-step mixing telemetry from a realized weight schedule.
+
+    ``record(k, t, state, out, dt)`` has exactly the driver's ``record``
+    hook signature (``t`` is the budget AFTER the step, so the step just
+    consumed rounds [t - wps, t)); use it directly as the hook, chain it
+    from an existing one, or pass the recorder as
+    ``driver.run_algorithm(..., telemetry=...)``.
+    """
+
+    def __init__(self, realized: gossip.WeightSchedule, wps: int,
+                 window: int | None = None, every: int = 1):
+        self.realized = realized
+        self.wps = wps
+        self.window = window if window is not None else max(4 * wps, 8)
+        self.every = max(1, every)
+        self.history: list = []
+
+    def _window_metrics(self, t: int) -> dict:
+        lo = max(0, t - self.window)
+        if t <= lo:
+            return {"window": [lo, t], "spectral_gap": None,
+                    "eff_diameter": None, "kinds": {}}
+        mats = np.stack([np.asarray(self.realized(r), np.float64)
+                         for r in range(lo, t)])
+        adjs = window_adjacency(mats)
+        kinds: dict = {}
+        for r in range(lo, t):
+            s = self.realized.structure(r)
+            kind = s.kind if s is not None else \
+                topo.classify_adjacency(adjs[r - lo]).kind
+            kinds[kind] = kinds.get(kind, 0) + 1
+        return {"window": [lo, t],
+                "spectral_gap": round(windowed_spectral_gap(mats), 6),
+                "eff_diameter": empirical_effective_diameter(adjs),
+                "kinds": kinds}
+
+    def record(self, k: int, t: int, state: Any, out: Any,
+               dt: float) -> Optional[dict]:
+        if k % self.every:
+            return None
+        loss = None
+        if isinstance(out, dict) and "loss" in out:
+            loss = float(jax.device_get(out["loss"]))
+        entry = {"step": int(k), "t": int(t), "loss": loss,
+                 "consensus": consensus_distance(state.x),
+                 "sec": round(float(dt), 4)}
+        entry.update(self._window_metrics(int(t)))
+        self.history.append(entry)
+        return entry
+
+    def dump(self, path: str) -> None:
+        """Write ``{"fields": <reference>, "history": [...]}`` as JSON."""
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"fields": TELEMETRY_FIELDS, "history": self.history},
+                      f, indent=1)

@@ -121,6 +121,37 @@ def test_classify_adjacency_round_structures():
         ["empty", "empty", "complete"]
 
 
+@pytest.mark.parametrize("n,beta", [(8, 0.5), (16, 0.75), (16, 1 - 1 / 16),
+                                    (12, 0.0)])
+def test_effective_diameter_vectorized_equals_pairwise(n, beta):
+    """The all-pairs frontier propagation must equal the O(n^2) pairwise
+    reference scan it replaced, pinned on the Theorem 3 schedules (and a
+    couple of structurally different ones below)."""
+    sched = topo.sun_shaped_schedule(n, beta)
+    assert topo.effective_diameter(sched, period=sched.period) == \
+        topo._effective_diameter_pairwise(sched, period=sched.period)
+
+
+def test_effective_diameter_vectorized_equals_pairwise_other_families():
+    for sched in (topo.StaticSchedule(topo.ring_graph(9)),
+                  topo.one_peer_exponential_schedule(8),
+                  topo.federated_schedule(8, 3),
+                  topo.erdos_renyi_schedule(10, 0.2, period=4, seed=3)):
+        assert topo.effective_diameter(sched) == \
+            topo._effective_diameter_pairwise(sched)
+
+
+def test_classify_partial_matching():
+    """Degraded (partial) matchings classify as matching with fixed points
+    — the lowering channel faults rely on (repro.sim)."""
+    adj = np.eye(8, dtype=bool)
+    adj[0, 1] = adj[1, 0] = True
+    adj[4, 6] = adj[6, 4] = True
+    s = topo.classify_adjacency(adj)
+    assert s.kind == "matching"
+    assert s.perm == (1, 0, 2, 3, 6, 5, 4, 7)
+
+
 def test_random_matching_schedule():
     sched = topo.random_matching_schedule(12, period=8, seed=1)
     for t in range(sched.period):
