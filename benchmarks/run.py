@@ -17,14 +17,21 @@ Prints ``name,us_per_call,derived`` CSV lines.
   kernel_*           — Pallas kernels (interpret mode) vs jnp oracle.
       derived = max |kernel - oracle|.
   engine_step_*      — throughput of the engine-built distributed step,
-      one row per update rule; also writes BENCH_engine.json.
+      one row per update rule (an ``exp.sweep`` over algorithm.name);
+      also writes BENCH_engine.json.
   sim_*              — repro.sim wireless data path: mobility schedule
       resampling, channel degradation + weight repair, and gossip-plan
       restaging of the realized window; writes BENCH_sim.json.
   roofline_summary   — reads experiments/dryrun/*.json if present.
       derived = #pairs whose dominant term is compute/memory/collective.
 
+Scenario-parameterized benches (gossip_plan / engine_step / sim) generate
+their rows from :class:`repro.exp.ExperimentSpec` grids via ``exp.sweep``
+and emit through one :class:`BenchWriter`, so every BENCH_*.json shares the
+schema {name, spec_hash, wall_ms, throughput, derived}.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]
+        [--json PATH]
 """
 
 from __future__ import annotations
@@ -43,12 +50,52 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-RESULTS = []
+ALL_ROWS = []  # every row of the run, for the top-level --json dump
+
+
+def _emit(name: str, us_per_call: float, derived, *, spec=None,
+          throughput: float | None = None) -> dict:
+    """Print the CSV line and append a row in the shared BENCH schema —
+    ``name``, ``spec_hash`` (the scenario's :func:`repro.exp.spec_hash`,
+    None for non-spec'd micro-benches), ``wall_ms`` per call,
+    ``throughput`` (calls/s), free-form ``derived``."""
+    if spec is not None:
+        from repro import exp
+        spec_hash = exp.spec_hash(spec)
+    else:
+        spec_hash = None
+    if throughput is None and us_per_call > 0:
+        throughput = round(1e6 / us_per_call, 2)
+    rec = {"name": name, "spec_hash": spec_hash,
+           "wall_ms": round(us_per_call / 1000, 4),
+           "throughput": throughput, "derived": derived}
+    ALL_ROWS.append(rec)
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    return rec
+
+
+class BenchWriter:
+    """Collects the rows of one bench family (same schema as :func:`_emit`)
+    so they can be dumped to that family's BENCH_*.json artifact."""
+
+    def __init__(self):
+        self.rows = []
+
+    def row(self, name: str, us_per_call: float, derived, *,
+            spec=None, throughput: float | None = None) -> None:
+        self.rows.append(_emit(name, us_per_call, derived, spec=spec,
+                               throughput=throughput))
+
+    def dump(self, path: str) -> None:
+        if os.path.dirname(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.rows, f, indent=1)
+        print(f"wrote {path}", file=sys.stderr)
 
 
 def record(name: str, us_per_call: float, derived) -> None:
-    RESULTS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _emit(name, us_per_call, derived)
 
 
 def _timed(fn, *args, reps=3):
@@ -284,18 +331,23 @@ def bench_kernels(quick: bool) -> None:
 def bench_gossip_plan(quick: bool) -> None:
     """Times one full schedule period of multi-consensus on an (n, D) state:
     the dense einsum stack vs the structured GossipPlan lowering the auto
-    dispatcher picks.  derived = auto path us, speedup, the plan's round
-    kinds, and max |dense - auto| (must be ~0)."""
+    dispatcher picks, one row per topology of an ``exp.sweep`` grid.
+    derived = auto path us, speedup, the plan's round kinds, and
+    max |dense - auto| (must be ~0).  Writes BENCH_gossip_plan.json."""
+    from repro import exp
     from repro.core import algorithms as alg
     from repro.dist.collectives import stage_plan
-    from repro.launch.train import make_weight_schedule
 
     n = 16
     D = 65536 if quick else 1 << 20
     x = jax.random.normal(jax.random.key(0), (n, D))
-    for kind in ("sun", "one-peer-exp", "federated", "complete",
-                 "random-matching", "erdos-renyi"):
-        sched = make_weight_schedule(kind, n, 0.75)
+    base = exp.ExperimentSpec(topology=exp.TopologySpec(beta=0.75),
+                              run=exp.RunSpec(nodes=n))
+    w = BenchWriter()
+    for spec in exp.sweep(base, {"topology.kind": [
+            "sun", "one-peer-exp", "federated", "complete",
+            "random-matching", "erdos-renyi"]}):
+        sched = exp.build_topology(spec.topology, n, seed=spec.run.seed)
         P = sched.period
         plan = sched.plan(0, P)
         Ws = jnp.asarray(sched.stacked(0, P))
@@ -307,9 +359,10 @@ def bench_gossip_plan(quick: bool) -> None:
         us_a, out_a = _timed(auto_f, tensors, x)
         err = float(jnp.abs(out_d - out_a).max())
         kinds = ",".join(sorted(set(plan.kinds)))
-        record(f"gossip_plan_{kind}", us_d,
-               f"auto_us={us_a:.1f}|speedup={us_d / max(us_a, 1e-9):.2f}x"
-               f"|kinds={kinds}|err={err:.1e}")
+        w.row(f"gossip_plan_{spec.topology.kind}", us_d,
+              f"auto_us={us_a:.1f}|speedup={us_d / max(us_a, 1e-9):.2f}x"
+              f"|kinds={kinds}|err={err:.1e}", spec=spec)
+    w.dump("experiments/bench/BENCH_gossip_plan.json")
 
 
 # ---------------------------------------------------------------------------
@@ -320,40 +373,48 @@ def bench_sim(quick: bool) -> None:
     """Throughput of the wireless-simulation data path, per stage: mobility
     schedule resampling (unit-disk adjacency rounds), channel+repair
     realization (ideal W -> masked -> repaired), and plan restaging
-    (WeightSchedule.plan + stage_plan of the realized window).  derived =
-    rounds/s (and the realized plan's kind counts for the restage row).
-    Also writes experiments/bench/BENCH_sim.json — a CI artifact."""
-    from repro.core import gossip
+    (WeightSchedule.plan + stage_plan of the realized window).  Every stage
+    is keyed by the scenario spec it realizes.  derived = rounds/s (and the
+    realized plan's kind counts for the restage row).  Also writes
+    experiments/bench/BENCH_sim.json — a CI artifact."""
+    from repro import exp
     from repro.dist.collectives import stage_plan
-    from repro.sim import (BernoulliDropChannel, GilbertElliottChannel,
-                           random_geometric_schedule,
-                           random_waypoint_schedule, realize_weight_schedule)
+    from repro.sim import (random_geometric_schedule,
+                           random_waypoint_schedule,
+                           realize_weight_schedule)
 
     n = 16
     rounds = 64 if quick else 256
-    rows = []
+    base = exp.ExperimentSpec(run=exp.RunSpec(nodes=n))
+    w = BenchWriter()
 
-    def row(name, us, derived):
-        record(name, us, derived)
-        rows.append({"name": name, "us_per_call": round(us, 1),
-                     "derived": derived})
-
-    for tag, sched in [("geometric", random_geometric_schedule(n, seed=0)),
-                       ("waypoint", random_waypoint_schedule(n, seed=0))]:
+    # time the RAW topology resampling (per-round unit-disk adjacency
+    # draws) — exp.build_topology would pre-materialize the whole window
+    # outside the timed region and we'd be benchmarking tuple indexing
+    _mobility = {"geometric-mobility": random_geometric_schedule,
+                 "waypoint-mobility": random_waypoint_schedule}
+    for spec in exp.sweep(base, {"topology.kind": list(_mobility)}):
+        sched = _mobility[spec.topology.kind](
+            n, spec.topology.radius, seed=spec.run.seed)
         t0 = time.time()
         for t in range(rounds):
             sched(t)
         us = (time.time() - t0) * 1e6 / rounds
-        row(f"sim_resample_{tag}", us, f"rounds_per_s={1e6 / us:.0f}")
+        tag = spec.topology.kind.split("-")[0]
+        w.row(f"sim_resample_{tag}", us, f"rounds_per_s={1e6 / us:.0f}",
+              spec=spec)
 
-    ideal = gossip.schedule_from_topology(
-        random_waypoint_schedule(n, seed=0), horizon=rounds)
-    models = [BernoulliDropChannel(0.2, seed=1),
-              GilbertElliottChannel(0.1, seed=2)]
+    wspec = exp.with_overrides(base, {
+        "topology.kind": "waypoint-mobility",
+        "channel.link_drop": 0.2, "channel.burst_loss": 0.1})
+    ideal = exp.build_topology(wspec.topology, n, horizon=rounds,
+                               seed=wspec.run.seed)
+    models = exp.build_channel_models(wspec.channel, wspec.run.seed)
     t0 = time.time()
     realized = realize_weight_schedule(ideal, models, rounds=rounds)
     us = (time.time() - t0) * 1e6 / rounds
-    row("sim_realize_channel_repair", us, f"rounds_per_s={1e6 / us:.0f}")
+    w.row("sim_realize_channel_repair", us, f"rounds_per_s={1e6 / us:.0f}",
+          spec=wspec)
 
     t0 = time.time()
     plan = realized.plan(0, rounds)
@@ -362,13 +423,10 @@ def bench_sim(quick: bool) -> None:
     us = (time.time() - t0) * 1e6 / rounds
     kinds = "+".join(f"{plan.kinds.count(k)}x{k}"
                      for k in dict.fromkeys(plan.kinds))
-    row("sim_plan_restage", us,
-        f"rounds_per_s={1e6 / us:.0f}|kinds={kinds}")
+    w.row("sim_plan_restage", us,
+          f"rounds_per_s={1e6 / us:.0f}|kinds={kinds}", spec=wspec)
 
-    os.makedirs("experiments/bench", exist_ok=True)
-    with open("experiments/bench/BENCH_sim.json", "w") as f:
-        json.dump(rows, f, indent=1)
-    print("wrote experiments/bench/BENCH_sim.json", file=sys.stderr)
+    w.dump("experiments/bench/BENCH_sim.json")
 
 
 # ---------------------------------------------------------------------------
@@ -377,40 +435,36 @@ def bench_sim(quick: bool) -> None:
 
 def bench_engine_step(quick: bool) -> None:
     """Throughput of the engine-built distributed train step for EVERY
-    update rule the single-source engine defines, on the reduced qwen
-    config with dense gossip.  derived = steps/s and the rule's gossip
-    rounds per step.  Also writes experiments/bench/BENCH_engine.json —
-    the BENCH trajectory artifact CI uploads."""
-    import jax.numpy as jnp
-    from repro import configs
-    from repro.core import engine, gossip
-    from repro.data import token_stream_for
+    update rule the single-source engine defines — an ``exp.sweep`` over
+    ``algorithm.name`` on the reduced qwen config with dense gossip, each
+    row realized via ``exp.build``.  derived = steps/s and the rule's
+    gossip rounds per step.  Also writes
+    experiments/bench/BENCH_engine.json — the BENCH trajectory artifact CI
+    uploads."""
+    from repro import exp
     from repro.dist import steps as dsteps
-    from repro.models import build
 
-    cfg = configs.get("qwen1.5-0.5b").reduced()
-    model = build(cfg)
     n = 4
-    sched = gossip.theorem3_weight_schedule(n, 0.5)
-    rows = []
-    for algo in engine.ALGORITHMS:
-        R = 2 if algo == "mc_dsgt" else 1
-        wps = engine.make_rule(algo, gamma=0.05, R=R).weights_per_step
-        stream = token_stream_for(cfg, n, R, 1, 16, seed=0, active_vocab=16)
+    base = exp.ExperimentSpec(
+        data=exp.DataSpec(batch=1, seq=16, active_vocab=16),
+        topology=exp.TopologySpec(kind="sun", beta=0.5),
+        run=exp.RunSpec(nodes=n))
+    w = BenchWriter()
+    for spec in exp.sweep(base, {"algorithm.name": list(exp.ALGORITHMS)}):
+        spec = exp.with_field(spec, "algorithm.R",
+                              2 if spec.algorithm.name == "mc_dsgt" else 1)
+        b = exp.build(spec)
         init_s, warm, step = dsteps.make_train_step(
-            model, cfg, algo=algo, gamma=0.05, R=R)
-        state = warm(init_s(jax.random.key(0), n, jnp.float32),
-                     stream.batch_at(0))
-        W = jnp.asarray(sched.stacked(0, wps))
-        us, _ = _timed(jax.jit(step), state, stream.batch_at(1), W)
-        derived = f"steps_per_s={1e6 / max(us, 1e-9):.1f}|wps={wps}"
-        record(f"engine_step_{algo}", us, derived)
-        rows.append({"name": f"engine_step_{algo}",
-                     "us_per_call": round(us, 1), "derived": derived})
-    os.makedirs("experiments/bench", exist_ok=True)
-    with open("experiments/bench/BENCH_engine.json", "w") as f:
-        json.dump(rows, f, indent=1)
-    print("wrote experiments/bench/BENCH_engine.json", file=sys.stderr)
+            b.model, b.cfg, algo=spec.algorithm.name,
+            gamma=spec.algorithm.gamma, R=b.rule.R)
+        state = warm(init_s(jax.random.key(spec.run.seed), n, jnp.float32),
+                     b.stream.batch_at(0))
+        W = jnp.asarray(b.schedule.stacked(0, b.wps))
+        us, _ = _timed(jax.jit(step), state, b.stream.batch_at(1), W)
+        w.row(f"engine_step_{spec.algorithm.name}", us,
+              f"steps_per_s={1e6 / max(us, 1e-9):.1f}|wps={b.wps}",
+              spec=spec)
+    w.dump("experiments/bench/BENCH_engine.json")
 
 
 # ---------------------------------------------------------------------------
@@ -470,8 +524,7 @@ def main() -> None:
         if os.path.dirname(json_path):
             os.makedirs(os.path.dirname(json_path), exist_ok=True)
         with open(json_path, "w") as f:
-            json.dump([{"name": n, "us_per_call": round(us, 1), "derived": d}
-                       for n, us, d in RESULTS], f, indent=1)
+            json.dump(ALL_ROWS, f, indent=1)
         print(f"wrote {json_path}", file=sys.stderr)
 
 

@@ -3,86 +3,86 @@ network (paper §1: FedAvg = alternating local updates and global averaging).
 
 The federated schedule is `local_steps` rounds of the self-loop-only graph
 followed by one complete-graph round; running DSGD over it IS local-SGD /
-FedAvg.  Compares against the always-connected and sun-shaped schedules at
-equal communication budget (communication happens only on non-identity
-rounds, so the federated run 'pays' 1/(local_steps+1) of the comm cost).
+FedAvg.  Every scenario here is one :class:`repro.exp.ExperimentSpec`
+literal — the schedule choice, the Dirichlet heterogeneity, and the update
+rule are all spec fields, and ``repro.exp.build`` exposes the gossip plan
+that shows exactly where FedAvg's communication savings come from.
 
     PYTHONPATH=src python examples/federated.py
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro import exp
 
-from repro.core import algorithms as alg
-from repro.core import driver, gossip, topology as topo
-from repro.data import (logreg_dataset, logreg_dataset_dirichlet,
-                        logreg_loss_and_grad)
+N = 16
+T = 480
+
+_BASE = exp.ExperimentSpec(
+    model=exp.ModelRef(kind="logreg", d=64, m=256, rho=0.1),
+    data=exp.DataSpec(batch=16),
+    algorithm=exp.AlgorithmSpec(name="dsgd", gamma=0.4),
+    run=exp.RunSpec(nodes=N, steps=T, eval_every=T - 1),
+)
+
+# one DSGD run per schedule family, at equal total round budget
+SCHEDULE_SPECS = {
+    "fedavg(local=4)": exp.with_overrides(_BASE, {
+        "topology.kind": "federated", "topology.local_steps": 4}),
+    "fedavg(local=16)": exp.with_overrides(_BASE, {
+        "topology.kind": "federated", "topology.local_steps": 16}),
+    "complete": exp.with_field(_BASE, "topology.kind", "complete"),
+    "sun(beta=1-1/n)": exp.with_overrides(_BASE, {
+        "topology.kind": "sun", "topology.beta": 1 - 1 / N}),
+}
+
+# the engine's federated rule family on Dirichlet(0.1) non-iid data
+_FED = exp.with_overrides(_BASE, {
+    "topology.kind": "federated", "topology.local_steps": 4,
+    "data.hetero_alpha": 0.1})
+RULE_SPECS = {
+    "local_sgd": exp.with_overrides(_FED, {
+        "algorithm.name": "local_sgd", "algorithm.gamma": 0.4}),
+    "gt_local": exp.with_overrides(_FED, {
+        "algorithm.name": "gt_local", "algorithm.gamma": 0.2}),
+    "dsgd": _FED,
+}
+
+# the CI spec-smoke pool (repro.exp.validate runs each for 2 steps)
+SPECS = {"fedavg4_dsgd": SCHEDULE_SPECS["fedavg(local=4)"],
+         "dirichlet_local_sgd": RULE_SPECS["local_sgd"],
+         "dirichlet_gt_local": RULE_SPECS["gt_local"]}
 
 
 def main():
-    n, d, m = 16, 64, 256
-    T = 480
-    H, y = logreg_dataset(n, m, d, seed=0)
-    _, _, stoch, _, gnorm2 = logreg_loss_and_grad(rho=0.1)
-    x0 = jnp.zeros((n, d))
-
-    def grad_fn(xs, key):
-        return stoch(xs, H, y, key, 16)
-
-    def eval_fn(xb):
-        return gnorm2(xb, H, y)
-
-    schedules = {
-        "fedavg(local=4)": gossip.schedule_from_topology(
-            topo.federated_schedule(n, local_steps=4)),
-        "fedavg(local=16)": gossip.schedule_from_topology(
-            topo.federated_schedule(n, local_steps=16)),
-        "complete": gossip.WeightSchedule((np.ones((n, n)) / n,)),
-        "sun(beta=1-1/n)": gossip.theorem3_weight_schedule(n, 1 - 1 / n),
-    }
-    print(f"n={n}  budget T={T}  DSGD with gamma=0.4 over each schedule")
+    print(f"n={N}  budget T={T}  DSGD with gamma=0.4 over each schedule")
     print(f"{'schedule':18s} {'final ||grad f(x_bar)||^2':>26s} "
           f"{'comm rounds':>12s}  gossip plan (one period)")
-    for name, sched in schedules.items():
-        _, hist = alg.run(alg.dsgd(0.4), x0, grad_fn, sched, T,
-                          jax.random.key(0), eval_fn=eval_fn, eval_every=T - 1)
+    for name, spec in SCHEDULE_SPECS.items():
+        res = exp.run(spec)
         # the gossip plan names each round's lowering; `empty` rounds are
         # the local steps — the auto dispatcher skips them entirely, so
         # FedAvg's saved communication is visible in the plan itself
-        plan = sched.plan()
+        plan = res.built.schedule.plan()
         comm = sum(1 for rd in plan.rounds if rd.kind != "empty") \
             * (T // plan.period)
         kinds = "+".join(f"{plan.kinds.count(k)}x{k}"
                          for k in dict.fromkeys(plan.kinds))
-        print(f"{name:18s} {float(hist[-1][1]):26.6f} {comm:12d}  {kinds}")
+        print(f"{name:18s} {float(res.history[-1][1]):26.6f} "
+              f"{comm:12d}  {kinds}")
     print("\nFedAvg trades convergence for (local_steps+1)x less "
           "communication — the time-varying-network view makes that a "
           "topology choice, not a different algorithm, and the gossip plan "
           "lowers each phase to its cheapest collective (empty rounds: "
           "none; the averaging round: one all-reduce).")
 
-    # The engine's federated update-rule family on Dirichlet(0.1) non-iid
-    # data: local_sgd is FedAvg proper (mix, then local step), gt_local
-    # adds a gradient tracker that keeps tracking through the local-only
-    # rounds — the heterogeneity correction FedAvg lacks.
-    Hh, yh = logreg_dataset_dirichlet(n, m, d, alpha=0.1, seed=0)
-
-    def grad_h(xs, key):
-        return stoch(xs, Hh, yh, key, 16)
-
-    fed = gossip.schedule_from_topology(topo.federated_schedule(n, 4))
+    # local_sgd is FedAvg proper (mix, then local step); gt_local adds a
+    # gradient tracker that keeps tracking through the local-only rounds —
+    # the heterogeneity correction FedAvg lacks.
     print(f"\nDirichlet(alpha=0.1) label-skew partition, fedavg(local=4), "
           f"budget T={T}:")
-    for name, algo in [("local_sgd", alg.local_sgd(0.4)),
-                       ("gt_local", alg.gt_local(0.2)),
-                       ("dsgd", alg.dsgd(0.4))]:
-        _, hist = driver.run_algorithm(
-            algo, x0, grad_h, fed, T // algo.weights_per_step,
-            jax.random.key(0), eval_fn=lambda xb: gnorm2(xb, Hh, yh),
-            eval_every=T - 1)
+    for name, spec in RULE_SPECS.items():
+        res = exp.run(spec)
         print(f"  {name:10s} final ||grad f(x_bar)||^2 = "
-              f"{float(hist[-1][1]):.6f}")
+              f"{float(res.history[-1][1]):.6f}")
 
 
 if __name__ == "__main__":

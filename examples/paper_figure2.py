@@ -7,8 +7,10 @@ Right plot protocol: (n, |C|) = (32, 4), R = 4, COVTYPE-like (d = 54)
 Heterogeneous partition: half the nodes hold 80% positive labels, the other
 half 80% negative (§6).  Datasets are synthetic stand-ins with the same
 shapes (no network access in this container); the *algorithmic* comparison
-— the figure's actual claim — is preserved.  Writes CSV curves to
-experiments/figure2_<name>.csv.
+— the figure's actual claim — is preserved.  Each (protocol, algorithm,
+stepsize) cell is one :class:`repro.exp.ExperimentSpec` (the §6 randomized
+sun schedule is the registered ``random-sun`` topology) run through
+``repro.exp.run``.  Writes CSV curves to experiments/figure2_<name>.csv.
 
     PYTHONPATH=src python examples/paper_figure2.py [--steps 400]
 """
@@ -16,55 +18,42 @@ experiments/figure2_<name>.csv.
 import argparse
 import os
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import configs
+from repro import exp
 from repro.configs.logreg_paper import COVTYPE, MNIST
-from repro.core import algorithms as alg
-from repro.core import driver, gossip, topology as topo
-from repro.data import logreg_dataset, logreg_loss_and_grad
 
 
-def random_sun_schedule(n: int, c_size: int, period: int = 16, seed: int = 0):
-    """Random time-varying sun-shaped graphs with |C| = c_size (the §6
-    protocol: centers re-drawn randomly each round)."""
-    rng = np.random.default_rng(seed)
-    mats = []
-    for _ in range(period):
-        center = rng.choice(n, size=c_size, replace=False)
-        adj = topo.sun_shaped_graph(n, center)
-        mats.append(gossip.laplacian_rule(adj))
-    return gossip.WeightSchedule(tuple(mats))
+def base_spec(lc, seed: int = 0) -> exp.ExperimentSpec:
+    """The protocol's scenario literal — everything but the algorithm cell."""
+    return exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=lc.d, m=lc.m, rho=lc.rho),
+        data=exp.DataSpec(batch=lc.batch),
+        topology=exp.TopologySpec(kind="random-sun", centers=lc.center_size),
+        run=exp.RunSpec(nodes=lc.n_nodes, seed=seed))
+
+
+# the CI spec-smoke pool (repro.exp.validate runs each for 2 steps)
+SPECS = {
+    "mnist_mc_dsgt": exp.with_overrides(base_spec(MNIST), {
+        "algorithm.name": "mc_dsgt", "algorithm.R": MNIST.R,
+        "algorithm.gamma": 0.5, "run.steps": 4}),
+}
 
 
 def run_setup(lc, T_budget: int, gamma: float, seed: int = 0):
-    n = lc.n_nodes
-    H, y = logreg_dataset(n, lc.m, lc.d, seed=seed)
-    _, _, stoch_grad, global_loss, gnorm2 = logreg_loss_and_grad(lc.rho)
-    sched = random_sun_schedule(n, lc.center_size, seed=seed)
-    x0 = jnp.zeros((n, lc.d))
-
-    def grad_fn(xs, key):
-        return stoch_grad(xs, H, y, key, lc.batch)
-
-    def eval_fn(xbar):
-        return gnorm2(xbar, H, y)
+    base = base_spec(lc, seed)
 
     # per-algorithm step-size tuning over a small grid (the paper reports
     # tuned curves): MC-DSGT's R-fold gradient accumulation cuts oracle
     # noise by R, admitting up to ~R x larger steps at equal stability.
-    def tuned(make_algo, steps, gammas):
-        # each candidate runs through the unified driver (staged schedule,
-        # in-jit window gather) — no hand-rolled loop
+    def tuned(algo, R, steps, gammas):
         best = None
         for g in gammas:
-            _, hist = driver.run_algorithm(make_algo(g), x0, grad_fn, sched,
-                                           steps, jax.random.key(seed),
-                                           eval_fn=eval_fn,
-                                           eval_every=max(1, steps // 40))
-            pts = [(t, float(v)) for t, v in hist]
+            spec = exp.with_overrides(base, {
+                "algorithm.name": algo, "algorithm.gamma": g,
+                "algorithm.R": R, "run.steps": steps,
+                "run.eval_every": max(1, steps // 40)})
+            res = exp.run(spec)
+            pts = [(t, float(v)) for t, v in res.history]
             if best is None or pts[-1][1] < best[-1][1]:
                 best = pts
         return best
@@ -72,10 +61,10 @@ def run_setup(lc, T_budget: int, gamma: float, seed: int = 0):
     curves = {}
     grid = [gamma, 2 * gamma]
     mc_grid = sorted({gamma, gamma * lc.R / 2, gamma * lc.R})
-    curves["dsgd"] = tuned(lambda g: alg.dsgd(g), T_budget, grid)
-    curves["dsgt"] = tuned(lambda g: alg.dsgt(g), T_budget // 2, grid)
+    curves["dsgd"] = tuned("dsgd", 1, T_budget, grid)
+    curves["dsgt"] = tuned("dsgt", 1, T_budget // 2, grid)
     curves[f"mc_dsgt(R={lc.R})"] = tuned(
-        lambda g: alg.mc_dsgt(g, R=lc.R), T_budget // (2 * lc.R), mc_grid)
+        "mc_dsgt", lc.R, T_budget // (2 * lc.R), mc_grid)
     for name, pts in curves.items():
         print(f"  {lc.name} {name:14s} final ||grad||^2 = {pts[-1][1]:.6f}")
     return curves

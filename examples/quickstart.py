@@ -1,58 +1,58 @@
 """Quickstart: decentralized non-convex optimization over a time-varying
 sun-shaped network — DSGD vs DSGT vs MC-DSGT (paper Table 1 in miniature).
 
-Runs the paper's §6 objective (logistic regression + non-convex regularizer)
-on synthetic heterogeneous data and prints the global gradient norm
-||∇f(x̄)||² per oracle/communication budget T for all three algorithms.
+Each run is ONE declarative :class:`repro.exp.ExperimentSpec` literal (the
+paper's §6 objective on synthetic heterogeneous data, sun-shaped schedule
+at the worst connectivity Theorem 3 allows) executed through
+``repro.exp.run`` — the same entry point as the training CLI.  Prints the
+global gradient norm ||∇f(x̄)||² per oracle/communication budget T.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from repro.core import algorithms as alg
-from repro.core import driver, gossip
-from repro.data import logreg_dataset, logreg_loss_and_grad
+from repro import exp
+
+N = 16
+BETA = 1 - 1 / N          # worst connectivity Theorem 3 allows
+R = 4                     # MC-DSGT consensus/accumulation rounds
+T_BUDGET = 960            # total gossip+oracle rounds per node
+GAMMA = 0.4
+
+_BASE = exp.ExperimentSpec(
+    model=exp.ModelRef(kind="logreg", d=64, m=256, rho=0.1),
+    data=exp.DataSpec(batch=16),
+    topology=exp.TopologySpec(kind="sun", beta=BETA),
+)
+
+
+def _spec(algo: str, steps: int, R: int = 1) -> exp.ExperimentSpec:
+    return dataclasses.replace(
+        _BASE,
+        algorithm=exp.AlgorithmSpec(name=algo, gamma=GAMMA, R=R),
+        run=exp.RunSpec(nodes=N, steps=steps,
+                        eval_every=max(1, steps // 8)))
+
+
+# Equal budget T: each algorithm gets T / weights_per_step steps.
+SPECS = {
+    "dsgd": _spec("dsgd", T_BUDGET),
+    "dsgt": _spec("dsgt", T_BUDGET // 2),
+    "mc_dsgt": _spec("mc_dsgt", T_BUDGET // (2 * R), R=R),
+}
 
 
 def main():
-    n, d, m = 16, 64, 256
-    beta = 1 - 1 / n          # worst connectivity Theorem 3 allows
-    R = 4                     # MC-DSGT consensus/accumulation rounds
-    T_budget = 960            # total gossip+oracle rounds per node
-    gamma = 0.4
-    batch = 16
-
-    H, y = logreg_dataset(n, m, d, seed=0)
-    loss_i, full_grad, stoch_grad, global_loss, gnorm2 = \
-        logreg_loss_and_grad(rho=0.1)
-    sched = gossip.theorem3_weight_schedule(n, beta)
-    x0 = jnp.zeros((n, d))
-
-    def grad_fn(xs, key):
-        return stoch_grad(xs, H, y, key, batch)
-
-    def eval_fn(xbar):
-        return gnorm2(xbar, H, y)
-
-    print(f"n={n} beta={beta:.4f} (sun-shaped, rotating centers, "
-          f"|C|={max(1, int(n * (1 - beta)))})  budget T={T_budget}")
+    print(f"n={N} beta={BETA:.4f} (sun-shaped, rotating centers, "
+          f"|C|={max(1, int(N * (1 - BETA)))})  budget T={T_BUDGET}")
     print(f"{'algo':10s} {'T':>6s} {'||grad f(x_bar)||^2':>22s}")
     results = {}
-    # every algorithm is one engine UpdateRule driven by the unified
-    # repro.core.driver loop — same staging/loop as the distributed CLI
-    for name, algo, steps in [
-        ("dsgd", alg.dsgd(gamma), T_budget),
-        ("dsgt", alg.dsgt(gamma), T_budget // 2),
-        ("mc_dsgt", alg.mc_dsgt(gamma, R=R), T_budget // (2 * R)),
-    ]:
-        state, hist = driver.run_algorithm(algo, x0, grad_fn, sched, steps,
-                                           jax.random.key(0), eval_fn=eval_fn,
-                                           eval_every=max(1, steps // 8))
-        for t, g in hist[-1:]:
+    for name, spec in SPECS.items():
+        res = exp.run(spec)
+        for t, g in res.history[-1:]:
             print(f"{name:10s} {t:6d} {float(g):22.6f}")
-        results[name] = float(hist[-1][1])
+        results[name] = float(res.history[-1][1])
 
     assert results["mc_dsgt"] <= results["dsgd"], \
         "MC-DSGT should dominate DSGD on a poorly-connected graph"

@@ -1,26 +1,55 @@
 """Wireless mobility + lossy channels: the paper's motivating scenario.
 
 "Decentralized algorithms are more robust in wireless scenarios especially
-when nodes are moving" — this example builds that scenario with
-`repro.sim`: 16 nodes move through the unit square (random-waypoint
-mobility, unit-disk links), the channel drops an increasing fraction of
-links per round (iid Bernoulli), the surviving links are repaired into a
-valid mixing matrix, and MC-DSGT / DSGD / gt_local run over the *realized*
-schedule while the telemetry recorder measures what the faults did to
-mixing (windowed spectral gap, empirical effective diameter of the
-realized rounds, consensus distance).
+when nodes are moving" — this example is that scenario as a spec grid:
+16 nodes move through the unit square (random-waypoint mobility, unit-disk
+links), the channel drops an increasing fraction of links per round (iid
+Bernoulli), the surviving links are repaired into a valid mixing matrix,
+and MC-DSGT / DSGD / gt_local run over the *realized* schedule.  The whole
+{algorithm} x {drop rate} matrix is ``repro.exp.sweep`` over ONE base
+:class:`~repro.exp.ExperimentSpec`; the mobility, channel, repair, and
+telemetry wiring all come from ``run(spec)``.
 
     PYTHONPATH=src python examples/wireless_mobility.py
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import algorithms as alg, gossip
-from repro.data import logreg_dataset_dirichlet, logreg_loss_and_grad
-from repro.sim import (BernoulliDropChannel, TelemetryRecorder,
-                       random_waypoint_schedule, realize_weight_schedule)
+from repro import exp
+
+N = 16
+T = 320                    # gossip/oracle budget per run
+R = 2                      # MC-DSGT consensus/accumulation rounds
+DROPS = (0.0, 0.2, 0.4)
+
+_BASE = exp.ExperimentSpec(
+    model=exp.ModelRef(kind="logreg", d=64, m=256, rho=0.1),
+    data=exp.DataSpec(batch=16, hetero_alpha=0.3),
+    topology=exp.TopologySpec(kind="waypoint-mobility", radius=0.45),
+    run=exp.RunSpec(nodes=N),
+)
+
+_ALGOS = {          # name -> (gamma, R)
+    "mc_dsgt": (0.3, R),
+    "gt_local": (0.2, 1),
+    "dsgd": (0.3, 1),
+}
+
+
+def _spec(algo: str, drop: float) -> exp.ExperimentSpec:
+    gamma, rr = _ALGOS[algo]
+    spec = exp.with_overrides(_BASE, {
+        "algorithm.name": algo, "algorithm.gamma": gamma, "algorithm.R": rr,
+        "channel.link_drop": drop})
+    # equal budget T: rounds per step come from the engine rule itself
+    steps = max(2, T // exp.weights_per_step(spec.algorithm))
+    return exp.with_overrides(spec, {
+        "run.steps": steps, "run.eval_every": max(1, steps - 1)})
+
+
+# the CI spec-smoke pool (repro.exp.validate runs each for 2 steps)
+SPECS = {"mc_dsgt_drop20": _spec("mc_dsgt", 0.2),
+         "dsgd_ideal": _spec("dsgd", 0.0)}
 
 
 def median(vals):
@@ -29,51 +58,21 @@ def median(vals):
 
 
 def main():
-    n, d, m = 16, 64, 256
-    T = 320                    # gossip/oracle budget per run
-    R = 2                      # MC-DSGT consensus/accumulation rounds
-    radius = 0.45
-
-    H, y = logreg_dataset_dirichlet(n, m, d, alpha=0.3, seed=0)
-    _, _, stoch, _, gnorm2 = logreg_loss_and_grad(rho=0.1)
-    x0 = jnp.zeros((n, d))
-
-    def grad_fn(xs, key):
-        return stoch(xs, H, y, key, 16)
-
-    def eval_fn(xb):
-        return gnorm2(xb, H, y)
-
-    mobility = random_waypoint_schedule(n, radius=radius, seed=0)
-    ideal = gossip.schedule_from_topology(mobility, horizon=T + 8)
-
-    algos = [
-        ("mc_dsgt", lambda: alg.mc_dsgt(0.3, R=R)),
-        ("gt_local", lambda: alg.gt_local(0.2)),
-        ("dsgd", lambda: alg.dsgd(0.3)),
-    ]
-    print(f"n={n}  random-waypoint mobility (radius={radius})  "
+    print(f"n={N}  random-waypoint mobility (radius=0.45)  "
           f"non-iid Dirichlet(0.3) data  budget T={T}")
     print(f"{'algo':9s} {'drop':>5s} {'||grad f(x_bar)||^2':>20s} "
           f"{'consensus':>10s} {'gap~':>7s} {'eff_diam~':>9s} "
           f"{'dropped rounds':>14s}")
     final = {}
-    for drop in (0.0, 0.2, 0.4):
-        sched = ideal if drop == 0.0 else realize_weight_schedule(
-            ideal, [BernoulliDropChannel(drop, seed=7)], rounds=T + 8)
-        for name, mk in algos:
-            algo = mk()
-            steps = max(2, T // algo.weights_per_step)
-            telem = TelemetryRecorder(sched, wps=algo.weights_per_step)
-            _, hist = alg.run(algo, x0, grad_fn, sched, steps,
-                              jax.random.key(0), eval_fn=eval_fn,
-                              eval_every=max(1, steps - 1),
-                              telemetry=telem)
-            g = float(hist[-1][1])
+    for drop in DROPS:
+        for name in _ALGOS:
+            res = exp.run(_spec(name, drop))
+            telem = res.telemetry  # created by run(): mobility => recorder
+            g = float(res.history[-1][1])
             gap = median([e["spectral_gap"] for e in telem.history])
             diam = median([e["eff_diameter"] for e in telem.history])
-            empty = sum(e["kinds"].get("empty", 0) for e in telem.history[-1:])
             last = telem.history[-1]
+            empty = last["kinds"].get("empty", 0)
             print(f"{name:9s} {drop:5.1f} {g:20.6f} "
                   f"{last['consensus']:10.4f} {gap:7.3f} "
                   f"{diam if diam is not None else float('nan'):9.1f} "

@@ -106,10 +106,19 @@ def bind_step(staged: StagedGossip, core_step):
 # ---------------------------------------------------------------------------
 
 def restore_or_warm(state, *, restore: Optional[str] = None, load_fn=None,
-                    warm: Optional[Callable] = None):
+                    warm: Optional[Callable] = None, spec=None):
     """Either restore ``(state, start_step)`` from a checkpoint or apply the
-    rule's warm start — never both (a checkpoint already holds warm state)."""
+    rule's warm start — never both (a checkpoint already holds warm state).
+
+    ``spec`` is the current run's :class:`repro.exp.ExperimentSpec` (when
+    the caller has one): if the checkpoint was written with a
+    reproducibility manifest (``<restore>.spec.json``), any mismatch on a
+    scenario-defining field raises a warning before the restore proceeds.
+    """
     if restore:
+        if spec is not None:
+            from ..exp import manifest as _mf  # deferred: exp imports core
+            _mf.check_restore_spec(restore, spec)
         state, start_step = load_fn(restore, state)
         return state, int(start_step)
     return (warm(state) if warm is not None else state), 0

@@ -1,0 +1,54 @@
+"""repro.exp — the declarative experiment front door.
+
+One :class:`ExperimentSpec` (a frozen dataclass tree: topology + channel +
+algorithm + data + model + run) describes any scenario the repo can run;
+``build(spec)`` lowers it to the realized schedule / update rule / data
+stream for both runtimes, and ``run(spec)`` is the single entry point the
+CLI (``launch/train.py``), the examples, and the benchmark sweeps all call.
+Specs serialize to strict JSON (``to_dict``/``from_dict``: unknown keys
+error, defaults elided) and hash stably (``spec_hash``) for BENCH rows and
+reproducibility manifests; ``sweep`` grid-expands a base spec over
+dotted-path override lists.
+"""
+
+from .build import Built, Result, build, run, weights_per_step  # noqa: F401
+from .manifest import (  # noqa: F401
+    check_restore_spec,
+    diff_specs,
+    load_manifest,
+    manifest_path,
+    resolved_manifest,
+    write_manifest,
+)
+from .registry import (  # noqa: F401
+    ALGORITHMS,
+    CHANNELS,
+    GOSSIP_IMPLS,
+    LOCAL_OPTS,
+    MOBILITY_TOPOLOGIES,
+    MODEL_KINDS,
+    TOPOLOGIES,
+    build_channel_models,
+    build_local_opt,
+    build_topology,
+    make_weight_schedule,
+    register_topology,
+)
+from .spec import (  # noqa: F401
+    AlgorithmSpec,
+    ChannelSpec,
+    DataSpec,
+    ExperimentSpec,
+    ModelRef,
+    RunSpec,
+    TopologySpec,
+    from_dict,
+    from_json,
+    load,
+    spec_hash,
+    sweep,
+    to_dict,
+    to_json,
+    with_field,
+    with_overrides,
+)

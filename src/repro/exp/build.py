@@ -1,0 +1,300 @@
+"""Lowering: realize an :class:`ExperimentSpec` into runnable pieces, and
+``run(spec)`` — the one entry point every runtime shares.
+
+``build(spec)`` resolves every string-keyed field through
+:mod:`repro.exp.registry` and materializes the realized scenario — the
+(post-fault) :class:`~repro.core.gossip.WeightSchedule`, the
+:class:`~repro.core.engine.UpdateRule`, the gossip plan, the telemetry
+recorder, and the model/data pieces of whichever runtime the spec's
+``model.kind`` selects:
+
+* ``arch``   — the distributed runtime: a registered architecture trained
+  via :func:`repro.dist.steps.make_train_step` + the unified
+  :mod:`repro.core.driver` staging/loop (what ``launch/train.py`` runs);
+* ``logreg`` — the host reference runtime: the paper's §6 non-convex
+  logistic regression driven by :func:`repro.core.driver.run_algorithm`
+  (what the examples and paper-claims benchmarks run).
+
+``run(spec)`` builds, writes the reproducibility manifest next to every
+declared output, runs, and returns a :class:`Result`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..checkpoint import load_checkpoint, save_checkpoint
+from ..core import algorithms as alg, driver, engine
+from ..data import (logreg_dataset, logreg_dataset_dirichlet,
+                    logreg_loss_and_grad, token_stream_for)
+from ..sim import faults as sim_faults, telemetry as sim_telemetry
+from . import manifest as mf, registry
+from .spec import ExperimentSpec
+
+
+class Result(NamedTuple):
+    """What ``run(spec)`` returns.  ``history`` is the runtime's record
+    list (dicts with loss/consensus for ``arch``; ``(T, eval)`` pairs for
+    ``logreg``); ``telemetry`` is the mixing-telemetry recorder when the
+    scenario warranted one (faults, mobility, or ``run.telemetry`` set);
+    ``built`` is the realized scenario (:class:`Built`) — consumers that
+    need the realized schedule/plan read it here instead of re-building."""
+
+    state: Any
+    history: list
+    telemetry: Optional[sim_telemetry.TelemetryRecorder]
+    spec: ExperimentSpec
+    built: "Built" = None
+
+
+@dataclasses.dataclass
+class Built:
+    """Everything ``build(spec)`` realized.  Scenario pieces (rule,
+    schedule, plan, faults, telemetry) are populated for every model kind;
+    ``cfg``/``model``/``stream`` only for ``arch``;
+    ``grad_fn``/``eval_fn``/``x0`` only for ``logreg``."""
+
+    spec: ExperimentSpec
+    rule: engine.UpdateRule
+    wps: int
+    horizon: int
+    schedule: Any                 # realized WeightSchedule (post-fault)
+    plan: Any                     # GossipPlan | None (gossip_impl == auto)
+    fault_models: list
+    local_opt: Any
+    telemetry: Optional[sim_telemetry.TelemetryRecorder]
+    cfg: Any = None
+    model: Any = None
+    stream: Any = None
+    grad_fn: Any = None
+    eval_fn: Any = None
+    x0: Any = None
+
+    @property
+    def realized(self) -> dict:
+        """The manifest's ``realized`` section: quantities a reader cannot
+        derive from the spec alone."""
+        return {
+            "period": int(self.schedule.period),
+            "weights_per_step": int(self.wps),
+            "horizon": int(self.horizon),
+            "seed": int(self.spec.run.seed),
+            "plan_kinds": (None if self.plan is None
+                           else sorted(set(self.plan.kinds))),
+        }
+
+
+def weights_per_step(algorithm) -> int:
+    """Gossip rounds one step of this :class:`AlgorithmSpec` consumes (the
+    paper's budget accounting) — derived from the engine rule, the single
+    source of truth, so ``steps = T // weights_per_step(a)`` stays correct
+    if a rule's round structure ever changes."""
+    R = algorithm.R if algorithm.name == "mc_dsgt" else 1
+    return engine.make_rule(algorithm.name, gamma=algorithm.gamma,
+                            R=R).weights_per_step
+
+
+def _validate(spec: ExperimentSpec) -> None:
+    """Registry-driven validation: every string-keyed field must name a
+    registered entry, and the error enumerates the legal values."""
+    t, a, r, m = spec.topology, spec.algorithm, spec.run, spec.model
+    if t.kind not in registry.TOPOLOGIES:
+        raise ValueError(f"topology.kind={t.kind!r}: unknown "
+                         f"(have {sorted(registry.TOPOLOGIES)})")
+    if a.name not in registry.ALGORITHMS:
+        raise ValueError(f"algorithm.name={a.name!r}: unknown "
+                         f"(have {sorted(registry.ALGORITHMS)})")
+    if a.local_opt not in registry.LOCAL_OPTS:
+        raise ValueError(f"algorithm.local_opt={a.local_opt!r}: unknown "
+                         f"(have {sorted(registry.LOCAL_OPTS)})")
+    if r.gossip_impl not in registry.GOSSIP_IMPLS:
+        raise ValueError(f"run.gossip_impl={r.gossip_impl!r}: unknown "
+                         f"(have {sorted(registry.GOSSIP_IMPLS)})")
+    if m.kind not in registry.MODEL_KINDS:
+        raise ValueError(f"model.kind={m.kind!r}: unknown "
+                         f"(have {sorted(registry.MODEL_KINDS)})")
+    if m.kind == "logreg":
+        if r.gossip_impl == "pallas":
+            raise ValueError("model.kind='logreg' runs the host runtime: "
+                             "gossip_impl must be 'dense' or 'auto'")
+        if r.checkpoint or r.restore:
+            raise ValueError("model.kind='logreg' does not support "
+                             "checkpoint/restore (use the 'arch' runtime)")
+
+
+def build(spec: ExperimentSpec) -> Built:
+    """Realize ``spec``: resolve registries, materialize the (possibly
+    fault-degraded) weight schedule, lower the gossip plan, and construct
+    the runtime-specific model/data pieces."""
+    _validate(spec)
+    rs, al = spec.run, spec.algorithm
+    n = rs.nodes
+    # R (consensus/accumulation rounds) is mc_dsgt's knob; every other rule
+    # is defined at R=1 and the engine enforces it
+    R = al.R if al.name == "mc_dsgt" else 1
+    rule = engine.make_rule(al.name, gamma=al.gamma, R=R)
+    wps = rule.weights_per_step
+
+    # horizon only matters for the non-periodic schedules (resampled
+    # matching, mobility) and realized fault windows; the x4 cushion covers
+    # --restore continuations (wrap past it is benign)
+    horizon = (rs.steps + 1) * wps * 4
+    sched = registry.build_topology(spec.topology, n, horizon=horizon,
+                                    seed=rs.seed)
+    fault_models = registry.build_channel_models(spec.channel, rs.seed)
+    if fault_models:
+        # ideal plan -> channel degradation -> repair -> (re-)lowering: the
+        # realized window replaces the schedule wholesale, so both gossip
+        # impls consume the same post-fault matrices
+        sched = sim_faults.realize_weight_schedule(sched, fault_models,
+                                                   rounds=horizon)
+    plan = sched.plan(0, sched.period) if rs.gossip_impl == "auto" else None
+    telem = None
+    if fault_models or rs.telemetry or \
+            spec.topology.kind in registry.MOBILITY_TOPOLOGIES:
+        telem = sim_telemetry.TelemetryRecorder(sched, wps=wps,
+                                                every=rs.log_every)
+    built = Built(spec=spec, rule=rule, wps=wps, horizon=horizon,
+                  schedule=sched, plan=plan, fault_models=fault_models,
+                  local_opt=registry.build_local_opt(al.local_opt),
+                  telemetry=telem)
+
+    if spec.model.kind == "arch":
+        from ..models import build as build_model
+        cfg = configs.get(spec.model.arch)
+        if spec.model.preset == "reduced":
+            cfg = cfg.reduced()
+        built.cfg = cfg
+        built.model = build_model(cfg)
+        built.stream = token_stream_for(
+            cfg, n, R, spec.data.batch, spec.data.seq, seed=rs.seed,
+            active_vocab=spec.data.active_vocab,
+            hetero_alpha=spec.data.hetero_alpha)
+    else:
+        mr = spec.model
+        if spec.data.hetero_alpha is not None:
+            H, y = logreg_dataset_dirichlet(n, mr.m, mr.d,
+                                            alpha=spec.data.hetero_alpha,
+                                            seed=rs.seed)
+        else:
+            H, y = logreg_dataset(n, mr.m, mr.d, seed=rs.seed)
+        _, _, stoch, _, gnorm2 = logreg_loss_and_grad(rho=mr.rho)
+        batch = spec.data.batch
+        built.grad_fn = lambda xs, key: stoch(xs, H, y, key, batch)
+        built.eval_fn = lambda xb: gnorm2(xb, H, y)
+        built.x0 = jnp.zeros((n, mr.d))
+    return built
+
+
+# ---------------------------------------------------------------------------
+# run(spec): the one entry
+# ---------------------------------------------------------------------------
+
+def run(spec: ExperimentSpec, *, quiet: bool = False) -> Result:
+    """Build and execute ``spec`` end to end on its runtime, writing the
+    reproducibility manifest next to every declared output (checkpoint,
+    telemetry).  The telemetry manifest is written up front; the checkpoint
+    manifest is written only AFTER the restore check, so resuming in place
+    (checkpoint == restore) still compares against the ORIGINAL run's
+    manifest before overwriting it."""
+    built = build(spec)
+    if spec.run.telemetry:
+        mf.write_manifest(spec.run.telemetry, spec, realized=built.realized)
+    if spec.model.kind == "arch":
+        return _run_arch(built, quiet=quiet)
+    return _run_logreg(built)
+
+
+def _run_logreg(built: Built) -> Result:
+    """Host reference runtime: the engine rule bound to the stacked-einsum
+    (or planned) mixer, driven by :func:`repro.core.driver.run_algorithm`."""
+    spec, rs = built.spec, built.spec.run
+    algo = alg.from_rule(built.rule, built.local_opt)
+    state, history = driver.run_algorithm(
+        algo, built.x0, built.grad_fn, built.schedule, rs.steps,
+        jax.random.key(rs.seed), eval_fn=built.eval_fn,
+        eval_every=rs.eval_every, gossip_impl=rs.gossip_impl,
+        plan=built.plan, telemetry=built.telemetry)
+    if rs.telemetry and built.telemetry is not None:
+        built.telemetry.dump(rs.telemetry)
+    return Result(state=state, history=history, telemetry=built.telemetry,
+                  spec=spec, built=built)
+
+
+def _run_arch(built: Built, *, quiet: bool = False) -> Result:
+    """Distributed runtime: the engine rule bound to the mesh/plan mixers
+    via :func:`repro.dist.steps.make_train_step`, with the unified
+    stage/bind/loop driver, checkpointing and loss/consensus logging."""
+    from ..dist import steps as dsteps
+
+    spec, rs = built.spec, built.spec.run
+    stream, telem = built.stream, built.telemetry
+    init_state, warm_start, train_step = dsteps.make_train_step(
+        built.model, built.cfg, algo=spec.algorithm.name,
+        gamma=spec.algorithm.gamma, R=built.rule.R,
+        gossip_impl=rs.gossip_impl, plan=built.plan,
+        local_opt=built.local_opt,
+        pallas_interpret=jax.default_backend() != "tpu")
+
+    state = init_state(jax.random.key(rs.seed), rs.nodes, jnp.float32)
+    state, start_step = driver.restore_or_warm(
+        state, restore=rs.restore, load_fn=load_checkpoint,
+        warm=lambda s: warm_start(s, stream.batch_at(0)), spec=spec)
+    if rs.restore and not quiet:
+        print(f"restored step {start_step} from {rs.restore}")
+    if rs.checkpoint:
+        # written after the restore check (resume-in-place must be compared
+        # against the original manifest first) but before the loop, so even
+        # interrupted runs stay attributable
+        mf.write_manifest(rs.checkpoint, built.spec, realized=built.realized)
+
+    # Stage the whole period's gossip tensors on device ONCE; the jitted
+    # step indexes them by (t mod period) — no per-step stacked()/transfer.
+    staged = driver.stage(
+        built.schedule, wps=built.wps,
+        impl=("auto" if rs.gossip_impl == "auto" else "dense"),
+        plan=built.plan,
+        static_t=(rs.gossip_impl == "auto"
+                  and train_step.gossip_dispatch == "static"))
+    if rs.gossip_impl == "auto":
+        step_fn = driver.bind_step(staged, train_step)
+    else:
+        step_fn = driver.bind_step(
+            staged, lambda state, batch, W, t: train_step(state, batch, W))
+
+    def record(k, t, state, out, dt):
+        loss = float(out["loss"])
+        tl = telem.record(k, t, state, out, dt) if telem is not None else None
+        if k % rs.log_every != 0:
+            return None
+        ce = (tl["consensus"] if tl is not None
+              else sim_telemetry.consensus_distance(state.x))
+        extra = ""
+        if tl is not None:
+            ed = tl["eff_diameter"]
+            gap = tl["spectral_gap"]
+            extra = (f"  gap {gap if gap is not None else float('nan'):.3f}"
+                     f"  eff_diam {ed if ed is not None else '-'}")
+        if not quiet:
+            print(f"step {k:5d}  T={t:6d}  loss {loss:.4f}  "
+                  f"consensus {ce:.3e}{extra}  {dt:.2f}s")
+        return {"step": k, "loss": loss, "consensus": ce,
+                "sec": round(dt, 3)}
+
+    state, history = driver.run_loop(
+        step_fn, state, steps=rs.steps, wps=built.wps, period=staged.period,
+        start_step=start_step, extra_fn=lambda k: stream.batch_at(k + 1),
+        record=record, checkpoint=rs.checkpoint, save_fn=save_checkpoint)
+    if rs.checkpoint and not quiet:
+        print(f"saved {rs.checkpoint}")
+    if rs.telemetry and telem is not None:
+        telem.dump(rs.telemetry)
+        if not quiet:
+            print(f"wrote telemetry {rs.telemetry}")
+    return Result(state=state, history=history, telemetry=telem, spec=spec,
+                  built=built)

@@ -1,0 +1,192 @@
+"""String-keyed registries for every scenario vocabulary.
+
+The single source of truth for which topologies / channel models / update
+rules / local optimizers / gossip implementations exist: the CLI derives
+its ``choices`` lists from here, the builder resolves spec fields through
+here, and error messages enumerate from here — adding a registry entry
+updates all of them at once.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from .. import optim
+from ..core import engine, gossip, topology as topo
+from ..sim import channel as sim_channel, faults as sim_faults, \
+    mobility as sim_mobility
+from .spec import ChannelSpec, TopologySpec
+
+# ---------------------------------------------------------------------------
+# Topologies: name -> builder(spec, n, *, horizon, seed) -> WeightSchedule
+# ---------------------------------------------------------------------------
+
+TOPOLOGIES: Dict[str, Callable] = {}
+
+
+def register_topology(name: str):
+    """Register a topology builder under ``name`` (it becomes a legal
+    ``TopologySpec.kind``, a CLI ``--topology`` choice, and a sweep axis)."""
+    def deco(fn):
+        TOPOLOGIES[name] = fn
+        return fn
+    return deco
+
+
+@register_topology("sun")
+def _sun(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.theorem3_weight_schedule(n, s.beta)
+
+
+@register_topology("ring")
+def _ring(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(topo.StaticSchedule(topo.ring_graph(n)))
+
+
+@register_topology("one-peer-exp")
+def _one_peer_exp(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(topo.one_peer_exponential_schedule(n))
+
+
+@register_topology("static-exp")
+def _static_exp(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(
+        topo.StaticSchedule(topo.static_exponential_graph(n)))
+
+
+@register_topology("federated")
+def _federated(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(
+        topo.federated_schedule(n, s.local_steps))
+
+
+@register_topology("complete")
+def _complete(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.WeightSchedule((np.ones((n, n)) / n,),
+                                 (topo.RoundStructure("complete"),))
+
+
+@register_topology("random-matching")
+def _random_matching(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(topo.random_matching_schedule(n))
+
+
+@register_topology("resampled-matching")
+def _resampled_matching(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(
+        topo.resampled_matching_schedule(n, seed=seed), horizon=horizon)
+
+
+@register_topology("erdos-renyi")
+def _erdos_renyi(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(
+        topo.erdos_renyi_schedule(n, s.er_p, seed=seed))
+
+
+@register_topology("geometric-mobility")
+def _geometric_mobility(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(
+        sim_mobility.random_geometric_schedule(n, s.radius, seed=seed),
+        horizon=horizon)
+
+
+@register_topology("waypoint-mobility")
+def _waypoint_mobility(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    return gossip.schedule_from_topology(
+        sim_mobility.random_waypoint_schedule(n, s.radius, seed=seed),
+        horizon=horizon)
+
+
+@register_topology("random-sun")
+def _random_sun(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    """The §6 Figure 2 protocol: sun-shaped graphs whose |C| = ``centers``
+    center set is re-drawn randomly for each of ``resample_period`` rounds,
+    with the I - L/d_max Laplacian weights the paper's experiments use."""
+    rng = np.random.default_rng(seed)
+    mats, structs = [], []
+    for _ in range(s.resample_period):
+        center = rng.choice(n, size=s.centers, replace=False)
+        adj = topo.sun_shaped_graph(n, center)
+        mats.append(gossip.laplacian_rule(adj))
+        structs.append(topo.classify_adjacency(adj))
+    return gossip.WeightSchedule(tuple(mats), tuple(structs))
+
+
+MOBILITY_TOPOLOGIES = ("geometric-mobility", "waypoint-mobility")
+
+
+def build_topology(s: TopologySpec, n: int, *, horizon: int | None = None,
+                   seed: int = 0) -> gossip.WeightSchedule:
+    """Realize a :class:`TopologySpec` into a ``WeightSchedule`` for ``n``
+    nodes.  ``horizon`` is required by the non-periodic families
+    (resampled-matching, the mobility models); ``seed`` streams every
+    randomized family."""
+    if s.kind not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {s.kind!r} "
+                         f"(have {sorted(TOPOLOGIES)})")
+    return TOPOLOGIES[s.kind](s, n, horizon=horizon, seed=seed)
+
+
+def make_weight_schedule(kind: str, n: int, beta: float, *,
+                         horizon: int | None = None, seed: int = 0,
+                         er_p: float = 0.5,
+                         radius: float = 0.45) -> gossip.WeightSchedule:
+    """Legacy positional entry (the pre-spec ``launch.train`` helper) —
+    kept for benchmarks/tests; new code should build a
+    :class:`TopologySpec` and call :func:`build_topology`."""
+    return build_topology(
+        TopologySpec(kind=kind, beta=beta, er_p=er_p, radius=radius),
+        n, horizon=horizon, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Channel / fault models: ChannelSpec field -> factory(rate, seed)
+# ---------------------------------------------------------------------------
+
+# Per-stream seed offsets keep one --seed moving every stream together
+# without correlating them (same constants as the historical CLI).
+CHANNELS: Dict[str, Callable] = {
+    "link_drop": lambda p, seed: sim_channel.BernoulliDropChannel(
+        p, seed=seed + 101),
+    "burst_loss": lambda p, seed: sim_channel.GilbertElliottChannel(
+        p, seed=seed + 202),
+    "churn": lambda p, seed: sim_faults.NodeChurn(p, seed=seed + 303),
+    "straggler": lambda p, seed: sim_faults.StragglerInjection(
+        p, seed=seed + 404),
+}
+
+
+def build_channel_models(s: ChannelSpec, seed: int = 0) -> list:
+    """Fault-model instances for every non-zero rate in ``s`` (empty list =
+    ideal channel), in deterministic field order."""
+    return [CHANNELS[name](rate, seed)
+            for name in ("link_drop", "burst_loss", "churn", "straggler")
+            if (rate := getattr(s, name)) > 0]
+
+
+# ---------------------------------------------------------------------------
+# Algorithms, local optimizers, gossip implementations
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = engine.ALGORITHMS  # the engine's rule registry IS the registry
+
+LOCAL_OPTS: Dict[str, Callable | None] = {
+    "sgd": None,  # the paper-pure update: no transform
+    "momentum": optim.momentum,
+    "adam": optim.adam,
+}
+
+GOSSIP_IMPLS = ("dense", "pallas", "auto")
+
+MODEL_KINDS = ("arch", "logreg")
+
+
+def build_local_opt(name: str):
+    """Instantiate a local-optimizer transform (None for plain sgd)."""
+    if name not in LOCAL_OPTS:
+        raise ValueError(f"unknown local_opt {name!r} "
+                         f"(have {sorted(LOCAL_OPTS)})")
+    factory = LOCAL_OPTS[name]
+    return factory() if factory is not None else None

@@ -1,0 +1,279 @@
+"""The declarative experiment spec tree — one frozen dataclass per scenario
+axis, composing into :class:`ExperimentSpec`, the single description of a
+run that every runtime, example, benchmark and CLI entry point consumes.
+
+The paper's contribution is a complexity statement over *scenarios* —
+algorithm x time-varying topology x channel x heterogeneity — and this
+module is that grid made first-class: a spec is a value (hashable,
+comparable, `dataclasses.replace`-able), serializes to strict JSON
+(`to_dict`/`from_dict`: unknown keys error, defaults are elided), and
+`sweep` expands a base spec plus per-field override lists into the full
+scenario grid.  Realization (weight schedules, fault models, update rules,
+data streams) lives in :mod:`repro.exp.build`; legal values for the
+string-keyed fields live in :mod:`repro.exp.registry`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+from typing import Any, Mapping, Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# The spec tree
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """The time-varying network: which schedule family and its parameters.
+
+    ``kind`` is a :data:`repro.exp.registry.TOPOLOGIES` key.  Family
+    parameters: ``beta`` (sun: Assumption 3 spectral bound), ``er_p``
+    (erdos-renyi edge probability), ``radius`` (unit-disk range of the
+    mobility models), ``local_steps`` (federated: local rounds between
+    averaging rounds), ``centers``/``resample_period`` (random-sun: |C| and
+    the number of independent center draws materialized, the §6 Figure 2
+    protocol)."""
+
+    kind: str = "sun"
+    beta: float = 0.75
+    er_p: float = 0.5
+    radius: float = 0.45
+    local_steps: int = 4
+    centers: int = 1
+    resample_period: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    """Channel/fault degradation applied to the ideal schedule (all rates
+    are per-round probabilities; 0 everywhere = ideal channel).  Realized
+    via :mod:`repro.sim`: mask -> repair -> re-classified lowering."""
+
+    link_drop: float = 0.0    # iid per-link Bernoulli loss
+    burst_loss: float = 0.0   # Gilbert-Elliott good->bad transition prob
+    churn: float = 0.0        # per-node failure prob (all links down)
+    straggler: float = 0.0    # per-node deadline-miss prob
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmSpec:
+    """Which update rule and its scalars.  ``name`` is an
+    :data:`repro.exp.registry.ALGORITHMS` entry; ``R`` (consensus/
+    accumulation rounds) only applies to ``mc_dsgt`` — every other rule is
+    defined at R=1 and the builder normalizes; ``local_opt`` is a
+    :data:`repro.exp.registry.LOCAL_OPTS` key."""
+
+    name: str = "mc_dsgt"
+    gamma: float = 0.05
+    R: int = 2
+    local_opt: str = "sgd"
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Per-node data stream.  For ``arch`` models: synthetic LM token
+    batches (``seq``, ``active_vocab``).  For ``logreg``: the §6 protocol
+    (``batch`` = stochastic-oracle minibatch).  ``hetero_alpha`` is the
+    Dirichlet(alpha) non-iid knob on both (None = the model family's
+    default partition: iid tokens / the paper's 80-20 label split)."""
+
+    batch: int = 2
+    seq: int = 64
+    active_vocab: int = 64
+    hetero_alpha: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelRef:
+    """What is being optimized.  ``kind='arch'``: a registered architecture
+    (:mod:`repro.configs`) trained by the distributed runtime
+    (:mod:`repro.dist.steps`).  ``kind='logreg'``: the paper's non-convex
+    logistic regression driven by the host reference runtime
+    (:func:`repro.core.driver.run_algorithm`)."""
+
+    kind: str = "arch"
+    arch: str = "qwen1.5-0.5b"
+    preset: str = "reduced"
+    d: int = 64        # logreg: feature dim
+    m: int = 256       # logreg: samples per node
+    rho: float = 0.1   # logreg: non-convex regularizer weight
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Run shape and I/O: everything that is not the scenario itself."""
+
+    steps: int = 20
+    nodes: int = 4
+    seed: int = 0
+    gossip_impl: str = "dense"    # repro.exp.registry.GOSSIP_IMPLS
+    log_every: int = 1
+    eval_every: int = 1           # logreg runtime: eval_fn cadence
+    checkpoint: Optional[str] = None
+    restore: Optional[str] = None
+    telemetry: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment = one point of the scenario grid.  The default value
+    of every field matches the historical ``launch/train.py`` flag default,
+    so an empty spec is the CLI's zero-flag run."""
+
+    model: ModelRef = ModelRef()
+    data: DataSpec = DataSpec()
+    algorithm: AlgorithmSpec = AlgorithmSpec()
+    topology: TopologySpec = TopologySpec()
+    channel: ChannelSpec = ChannelSpec()
+    run: RunSpec = RunSpec()
+
+
+_SECTION_TYPES = {"model": ModelRef, "data": DataSpec,
+                  "algorithm": AlgorithmSpec, "topology": TopologySpec,
+                  "channel": ChannelSpec, "run": RunSpec}
+
+
+# ---------------------------------------------------------------------------
+# Strict serialization
+# ---------------------------------------------------------------------------
+
+def _leaf_to_dict(sub, elide_defaults: bool) -> dict:
+    out = {}
+    for f in dataclasses.fields(sub):
+        v = getattr(sub, f.name)
+        if elide_defaults and v == f.default:
+            continue
+        out[f.name] = v
+    return out
+
+
+def to_dict(spec: ExperimentSpec, *, elide_defaults: bool = True) -> dict:
+    """Nested plain-dict form.  With ``elide_defaults`` (the default) every
+    field equal to its dataclass default is dropped — the dict names only
+    what the experiment *chose*, so diffs and manifests stay readable and
+    old manifests keep loading when new defaulted fields appear."""
+    out = {}
+    for name in _SECTION_TYPES:
+        d = _leaf_to_dict(getattr(spec, name), elide_defaults)
+        if d or not elide_defaults:
+            out[name] = d
+    return out
+
+
+def _leaf_from_dict(cls, d: Mapping, where: str):
+    if not isinstance(d, Mapping):
+        raise TypeError(f"{where}: expected a mapping, got {type(d).__name__}")
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise KeyError(f"{where}: unknown key(s) {sorted(unknown)} "
+                       f"(known: {sorted(known)})")
+    kwargs = {}
+    for f in dataclasses.fields(cls):
+        if f.name not in d:
+            continue
+        v = d[f.name]
+        # JSON round-trips ints for float fields (e.g. beta: 1) — normalize
+        # so from_dict(to_dict(s)) == s holds through a json.dumps cycle.
+        if f.type in ("float", "Optional[float]", float) \
+                and isinstance(v, int) and not isinstance(v, bool):
+            v = float(v)
+        kwargs[f.name] = v
+    return cls(**kwargs)
+
+
+def from_dict(d: Mapping) -> ExperimentSpec:
+    """Strict inverse of :func:`to_dict`: unknown keys raise (at every
+    level), missing keys take the dataclass default."""
+    if not isinstance(d, Mapping):
+        raise TypeError(f"spec: expected a mapping, got {type(d).__name__}")
+    unknown = set(d) - set(_SECTION_TYPES)
+    if unknown:
+        raise KeyError(f"spec: unknown section(s) {sorted(unknown)} "
+                       f"(known: {sorted(_SECTION_TYPES)})")
+    kwargs = {name: _leaf_from_dict(cls, d[name], name)
+              for name, cls in _SECTION_TYPES.items() if name in d}
+    return ExperimentSpec(**kwargs)
+
+
+def to_json(spec: ExperimentSpec, *, elide_defaults: bool = True,
+            indent: int | None = 1) -> str:
+    return json.dumps(to_dict(spec, elide_defaults=elide_defaults),
+                      indent=indent, sort_keys=True)
+
+
+def from_json(text: str) -> ExperimentSpec:
+    return from_dict(json.loads(text))
+
+
+def load(path: str) -> ExperimentSpec:
+    """Load a spec (or a manifest wrapping one under a ``"spec"`` key —
+    only the known manifest format is unwrapped; anything else errors)."""
+    with open(path) as f:
+        d = json.load(f)
+    if isinstance(d, Mapping) and "format" in d:
+        from .manifest import MANIFEST_FORMAT  # deferred: manifest imports us
+        if d["format"] != MANIFEST_FORMAT:
+            raise ValueError(f"{path}: unsupported manifest format "
+                             f"{d['format']!r} (want {MANIFEST_FORMAT!r})")
+        d = d.get("spec", {})
+    return from_dict(d)
+
+
+def spec_hash(spec: ExperimentSpec) -> str:
+    """Short stable content hash of the fully-resolved spec — the scenario
+    identity used by BENCH rows and manifests.  The spec is normalized
+    through ``from_dict`` first so equal specs hash equally even when a
+    float field was populated with a Python int (json would emit ``1`` vs
+    ``1.0`` and split the hash)."""
+    canon_spec = from_dict(to_dict(spec, elide_defaults=False))
+    canon = json.dumps(to_dict(canon_spec, elide_defaults=False),
+                       sort_keys=True)
+    return hashlib.sha256(canon.encode()).hexdigest()[:12]
+
+
+# ---------------------------------------------------------------------------
+# Dotted-path overrides and grid expansion
+# ---------------------------------------------------------------------------
+
+def with_field(spec: ExperimentSpec, path: str, value) -> ExperimentSpec:
+    """Return ``spec`` with one dotted-path field replaced, e.g.
+    ``with_field(s, "algorithm.name", "dsgd")``."""
+    section, _, field = path.partition(".")
+    if section not in _SECTION_TYPES or not field:
+        raise KeyError(f"bad override path {path!r} (want "
+                       f"'<section>.<field>', sections: "
+                       f"{sorted(_SECTION_TYPES)})")
+    sub = getattr(spec, section)
+    if field not in {f.name for f in dataclasses.fields(sub)}:
+        raise KeyError(f"unknown field {field!r} in section {section!r}")
+    return dataclasses.replace(spec, **{
+        section: dataclasses.replace(sub, **{field: value})})
+
+
+def with_overrides(spec: ExperimentSpec,
+                   overrides: Mapping[str, Any]) -> ExperimentSpec:
+    for path, value in overrides.items():
+        spec = with_field(spec, path, value)
+    return spec
+
+
+def sweep(base: ExperimentSpec,
+          overrides: Mapping[str, Sequence]) -> list[ExperimentSpec]:
+    """Grid-expand ``base`` over per-field value lists: the cartesian
+    product of every ``{"section.field": [v0, v1, ...]}`` axis, in
+    deterministic (insertion x value) order.
+
+        sweep(base, {"algorithm.name": ["dsgd", "mc_dsgt"],
+                     "channel.link_drop": [0.0, 0.2]})   # 4 specs
+    """
+    paths = list(overrides)
+    grids = [list(overrides[p]) for p in paths]
+    out = []
+    for combo in itertools.product(*grids):
+        out.append(with_overrides(base, dict(zip(paths, combo))))
+    return out

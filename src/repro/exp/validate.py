@@ -1,0 +1,124 @@
+"""CI spec-smoke entry: prove every example's spec literal builds and runs,
+and that every checked-in manifest still parses (schema drift fails fast).
+
+    PYTHONPATH=src python -m repro.exp.validate [--examples DIR]
+        [--manifests GLOB] [--steps N]
+
+Two passes:
+
+1. every ``SPECS`` entry exported by the example scripts is rebuilt with a
+   tiny run shape (``--steps``, no checkpoint/telemetry I/O) and executed
+   end to end through :func:`repro.exp.run`;
+2. every manifest matching ``--manifests`` (the checked-in scenario
+   manifests under ``experiments/manifests/`` by default) is round-tripped
+   through the strict ``from_dict``/``to_dict`` pair, and the run fails if
+   fewer than ``--min-manifests`` matched (a vacuous glob is a failure,
+   not a pass).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import importlib.util
+import os
+import sys
+
+from . import manifest as mf, spec as S
+from .build import run as _run
+
+
+def iter_example_specs(examples_dir: str):
+    """Yield ``(example_name, spec_name, spec)`` for every module-level
+    ``SPECS`` mapping in ``<examples_dir>/*.py``."""
+    for path in sorted(glob.glob(os.path.join(examples_dir, "*.py"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        modname = f"_exp_validate_{name}"
+        spec_obj = importlib.util.spec_from_file_location(modname, path)
+        mod = importlib.util.module_from_spec(spec_obj)
+        sys.modules[modname] = mod
+        spec_obj.loader.exec_module(mod)
+        for spec_name, spec in getattr(mod, "SPECS", {}).items():
+            yield name, spec_name, spec
+
+
+def shrink(spec: S.ExperimentSpec, steps: int) -> S.ExperimentSpec:
+    """A smoke-sized copy of ``spec``: ``steps`` steps, no output files."""
+    return dataclasses.replace(spec, run=dataclasses.replace(
+        spec.run, steps=steps, eval_every=1, checkpoint=None, restore=None,
+        telemetry=None))
+
+
+def validate_manifests(pattern: str) -> list[str]:
+    """Strict round-trip of every manifest matching ``pattern``; returns
+    failure strings (empty = all good)."""
+    failures = []
+    for path in sorted(glob.glob(pattern)):
+        try:
+            m = mf.load_manifest(path)
+            spec = m["spec_parsed"]
+            again = S.from_dict(S.to_dict(spec))
+            if again != spec:
+                failures.append(f"{path}: to_dict/from_dict not a fixpoint")
+            if m["spec_hash"] != S.spec_hash(spec):
+                failures.append(f"{path}: stored spec_hash "
+                                f"{m['spec_hash']} != {S.spec_hash(spec)}")
+        except Exception as e:  # noqa: BLE001 - report, don't crash the loop
+            failures.append(f"{path}: {type(e).__name__}: {e}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--examples", default="examples")
+    ap.add_argument("--manifests", default="experiments/manifests/*.json")
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--min-manifests", type=int, default=1,
+                    help="fail unless at least this many checked-in "
+                         "manifests matched --manifests (guards against "
+                         "the glob silently matching nothing)")
+    ap.add_argument("--only", default=None,
+                    help="run only example specs whose name contains SUBSTR")
+    args = ap.parse_args(argv)
+
+    failures = []
+    n_specs = 0
+    for example, spec_name, spec in iter_example_specs(args.examples):
+        tag = f"{example}:{spec_name}"
+        if args.only and args.only not in tag:
+            continue
+        n_specs += 1
+        try:
+            small = shrink(spec, args.steps)
+            # the JSON round trip is part of the contract being smoked
+            assert S.from_json(S.to_json(small)) == small
+            result = _run(small, quiet=True)
+            assert result.history is not None
+            print(f"ok   {tag}  [{S.spec_hash(small)}]  "
+                  f"history={len(result.history)}")
+        except Exception as e:  # noqa: BLE001 - collect all failures
+            failures.append(f"{tag}: {type(e).__name__}: {e}")
+            print(f"FAIL {tag}: {e}")
+    print(f"{n_specs} example spec(s) smoked")
+
+    mfails = validate_manifests(args.manifests)
+    n_manifests = len(glob.glob(args.manifests))
+    print(f"{n_manifests} manifest(s) round-tripped, {len(mfails)} failed")
+    failures += mfails
+    if n_manifests < args.min_manifests:
+        failures.append(
+            f"only {n_manifests} manifest(s) matched {args.manifests!r} "
+            f"(expected >= {args.min_manifests}) — the schema-drift guard "
+            "would be vacuous")
+
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

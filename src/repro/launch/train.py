@@ -1,13 +1,20 @@
-"""End-to-end decentralized training CLI.
+"""End-to-end decentralized training CLI — a thin argv -> spec translator.
 
-Runs any :mod:`repro.core.engine` update rule (MC-DSGT / DSGT / DSGD / D² /
-local_sgd / gt_local) over a time-varying topology schedule on any
-registered architecture (reduced or full), with checkpointing and loss /
-consensus logging.  The staging, window gather, restore-or-warm and loop
-all come from the unified :mod:`repro.core.driver` — this file only parses
-flags and binds the pieces.  On the CPU container this runs the reduced
-configs; on a real TPU pod, pass --mesh production to shard over the
-16x16 mesh.
+Every flag maps to one field of :class:`repro.exp.ExperimentSpec` (see
+``FLAG_TO_FIELD``); the run itself is ``repro.exp.run(spec)``, the same
+entry the examples and benchmark sweeps call.  Choice lists (topologies,
+algorithms, local optimizers, gossip impls) come from the
+:mod:`repro.exp.registry` vocabularies — adding a registry entry updates
+this CLI automatically.
+
+Config files: ``--config PATH`` loads a spec JSON (a bare spec or a
+reproducibility manifest) as the baseline and explicit flags override it;
+``--dump-config`` prints the fully-resolved spec JSON and exits, so
+
+    train --topology federated --algo local_sgd --dump-config > fed.json
+    train --config fed.json --steps 100
+
+round-trips any flag combination through a reviewable, versionable file.
 
 Example:
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
@@ -26,246 +33,135 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro import exp
+from repro.exp import make_weight_schedule  # noqa: F401  (legacy import site)
 
-from repro import configs, optim
-from repro.checkpoint import load_checkpoint, save_checkpoint
-from repro.core import driver, engine, gossip, topology as topo
-from repro.data import token_stream_for
-from repro.dist import steps as dsteps
-from repro.models import build
-from repro.sim import channel as sim_channel, faults as sim_faults, \
-    mobility as sim_mobility, telemetry as sim_telemetry
-
-
-def make_weight_schedule(kind: str, n: int, beta: float, *,
-                         horizon: int | None = None, seed: int = 0,
-                         er_p: float = 0.5,
-                         radius: float = 0.45) -> gossip.WeightSchedule:
-    """Build the weight schedule for one named topology scenario.
-
-    ``horizon`` (total gossip rounds the run will consume) is required by
-    the non-periodic schedules (``resampled-matching`` and the mobility
-    models); ``er_p`` is the Erdős–Rényi edge probability; ``radius`` the
-    unit-disk communication range of the mobility models."""
-    if kind == "sun":
-        return gossip.theorem3_weight_schedule(n, beta)
-    if kind == "one-peer-exp":
-        return gossip.schedule_from_topology(topo.one_peer_exponential_schedule(n))
-    if kind == "ring":
-        return gossip.schedule_from_topology(topo.StaticSchedule(topo.ring_graph(n)))
-    if kind == "static-exp":
-        return gossip.schedule_from_topology(
-            topo.StaticSchedule(topo.static_exponential_graph(n)))
-    if kind == "federated":
-        return gossip.schedule_from_topology(topo.federated_schedule(n, 4))
-    if kind == "random-matching":
-        return gossip.schedule_from_topology(topo.random_matching_schedule(n))
-    if kind == "resampled-matching":
-        return gossip.schedule_from_topology(
-            topo.resampled_matching_schedule(n, seed=seed), horizon=horizon)
-    if kind == "erdos-renyi":
-        return gossip.schedule_from_topology(
-            topo.erdos_renyi_schedule(n, er_p, seed=seed))
-    if kind == "geometric-mobility":
-        return gossip.schedule_from_topology(
-            sim_mobility.random_geometric_schedule(n, radius, seed=seed),
-            horizon=horizon)
-    if kind == "waypoint-mobility":
-        return gossip.schedule_from_topology(
-            sim_mobility.random_waypoint_schedule(n, radius, seed=seed),
-            horizon=horizon)
-    if kind == "complete":
-        return gossip.WeightSchedule((np.ones((n, n)) / n,))
-    raise ValueError(kind)
-
-TOPOLOGIES = ["sun", "ring", "one-peer-exp", "static-exp", "federated",
-              "complete", "random-matching", "resampled-matching",
-              "erdos-renyi", "geometric-mobility", "waypoint-mobility"]
+# flag dest -> dotted ExperimentSpec field.  This mapping IS the CLI's
+# semantics (and the README migration table): parse_args collects only the
+# flags actually given (argparse.SUPPRESS), and each one overrides the
+# baseline spec — the dataclass defaults, or the --config file.
+FLAG_TO_FIELD = {
+    "arch": "model.arch",
+    "preset": "model.preset",
+    "steps": "run.steps",
+    "nodes": "run.nodes",
+    "beta": "topology.beta",
+    "topology": "topology.kind",
+    "algo": "algorithm.name",
+    "gossip_impl": "run.gossip_impl",
+    "local_opt": "algorithm.local_opt",
+    "er_p": "topology.er_p",
+    "radius": "topology.radius",
+    "local_steps": "topology.local_steps",
+    "link_drop": "channel.link_drop",
+    "burst_loss": "channel.burst_loss",
+    "churn": "channel.churn",
+    "straggler": "channel.straggler",
+    "telemetry": "run.telemetry",
+    "hetero_alpha": "data.hetero_alpha",
+    "R": "algorithm.R",
+    "gamma": "algorithm.gamma",
+    "batch": "data.batch",
+    "seq": "data.seq",
+    "checkpoint": "run.checkpoint",
+    "restore": "run.restore",
+    "log_every": "run.log_every",
+    "active_vocab": "data.active_vocab",
+    "seed": "run.seed",
+}
 
 
-def consensus_error(x) -> float:
-    return sim_telemetry.consensus_distance(x)
-
-
-def make_fault_models(args) -> list:
-    """Channel/fault models from the CLI degradation flags (empty when the
-    channel is ideal).  Seeds are offset per stream so --seed moves every
-    stream together without correlating them."""
-    models = []
-    if args.link_drop > 0:
-        models.append(sim_channel.BernoulliDropChannel(
-            args.link_drop, seed=args.seed + 101))
-    if args.burst_loss > 0:
-        models.append(sim_channel.GilbertElliottChannel(
-            args.burst_loss, seed=args.seed + 202))
-    if args.churn > 0:
-        models.append(sim_faults.NodeChurn(args.churn, seed=args.seed + 303))
-    if args.straggler > 0:
-        models.append(sim_faults.StragglerInjection(
-            args.straggler, seed=args.seed + 404))
-    return models
-
-
-LOCAL_OPTS = {"sgd": None, "momentum": optim.momentum, "adam": optim.adam}
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--preset", choices=["reduced", "full"], default="reduced")
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--nodes", type=int, default=4)
-    ap.add_argument("--beta", type=float, default=0.75)
-    ap.add_argument("--topology", default="sun", choices=TOPOLOGIES)
-    ap.add_argument("--algo", default="mc_dsgt",
-                    choices=list(engine.ALGORITHMS))
-    ap.add_argument("--gossip-impl", default="dense",
-                    choices=["dense", "pallas", "auto"],
+def build_parser() -> argparse.ArgumentParser:
+    # SUPPRESS: a flag appears in the namespace only when explicitly given,
+    # so file-provided values are overridden by flags and nothing else.
+    ap = argparse.ArgumentParser(argument_default=argparse.SUPPRESS)
+    ap.add_argument("--config", metavar="PATH",
+                    help="baseline spec JSON (a spec or a manifest written "
+                         "by a previous run); explicit flags override it")
+    ap.add_argument("--dump-config", action="store_true",
+                    help="print the fully-resolved spec JSON and exit "
+                         "(pipe to a file, rerun with --config)")
+    ap.add_argument("--arch")
+    ap.add_argument("--preset", choices=["reduced", "full"])
+    ap.add_argument("--steps", type=int)
+    ap.add_argument("--nodes", type=int)
+    ap.add_argument("--beta", type=float)
+    ap.add_argument("--topology", choices=list(exp.TOPOLOGIES))
+    ap.add_argument("--algo", choices=list(exp.ALGORITHMS))
+    ap.add_argument("--gossip-impl", choices=list(exp.GOSSIP_IMPLS),
                     help="multi-consensus path: GSPMD einsum (dense), the "
                          "fused Pallas gossip_mix kernel (interpret-mode "
                          "fallback on CPU), or per-round structured dispatch "
                          "from the gossip plan (auto: sun / matching / "
                          "complete lowerings, dense fallback)")
-    ap.add_argument("--local-opt", default="sgd",
-                    choices=sorted(LOCAL_OPTS),
+    ap.add_argument("--local-opt", choices=sorted(exp.LOCAL_OPTS),
                     help="local-optimizer transform applied to the descent "
                          "direction (repro.optim; sgd = the paper-pure "
                          "update, no transform)")
-    ap.add_argument("--er-p", type=float, default=0.5,
+    ap.add_argument("--er-p", type=float,
                     help="edge probability for --topology erdos-renyi")
-    ap.add_argument("--radius", type=float, default=0.45,
+    ap.add_argument("--radius", type=float,
                     help="unit-disk communication range for the mobility "
                          "topologies (geometric-mobility, waypoint-mobility)")
-    ap.add_argument("--link-drop", type=float, default=0.0,
+    ap.add_argument("--local-steps", type=int,
+                    help="local-only rounds between averaging rounds for "
+                         "--topology federated")
+    ap.add_argument("--link-drop", type=float,
                     help="iid per-round per-link Bernoulli drop probability "
                          "(repro.sim channel degradation)")
-    ap.add_argument("--burst-loss", type=float, default=0.0,
+    ap.add_argument("--burst-loss", type=float,
                     help="Gilbert-Elliott bursty loss: per-round good->bad "
                          "transition probability (bad links drop their "
                          "round; recovery 0.25/round)")
-    ap.add_argument("--churn", type=float, default=0.0,
+    ap.add_argument("--churn", type=float,
                     help="per-round node failure probability (a down node "
                          "loses all links; recovery 0.3/round)")
-    ap.add_argument("--straggler", type=float, default=0.0,
+    ap.add_argument("--straggler", type=float,
                     help="per-round per-node straggler probability (a "
                          "straggler's links miss the round deadline and "
                          "are dropped)")
-    ap.add_argument("--telemetry", default=None, metavar="PATH",
+    ap.add_argument("--telemetry", metavar="PATH",
                     help="write the repro.sim mixing-telemetry JSON history "
                          "(consensus distance, windowed spectral gap, "
                          "realized effective diameter) to PATH")
-    ap.add_argument("--hetero-alpha", type=float, default=None,
+    ap.add_argument("--hetero-alpha", type=float,
                     help="Dirichlet(alpha) data heterogeneity across nodes: "
                          "each node draws its token distribution from a "
                          "Dirichlet prior over the active vocab (small "
                          "alpha = highly non-iid, the federated setting)")
-    ap.add_argument("--R", type=int, default=2)
-    ap.add_argument("--gamma", type=float, default=0.05)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--checkpoint", default=None)
-    ap.add_argument("--restore", default=None)
-    ap.add_argument("--log-every", type=int, default=1)
-    ap.add_argument("--active-vocab", type=int, default=64,
+    ap.add_argument("--R", type=int)
+    ap.add_argument("--gamma", type=float)
+    ap.add_argument("--batch", type=int)
+    ap.add_argument("--seq", type=int)
+    ap.add_argument("--checkpoint")
+    ap.add_argument("--restore")
+    ap.add_argument("--log-every", type=int)
+    ap.add_argument("--active-vocab", type=int,
                     help="restrict synthetic tokens to first k ids "
                          "(learnable stream); 0 = full vocab")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    ap.add_argument("--seed", type=int)
+    return ap
 
-    cfg = configs.get(args.arch)
-    if args.preset == "reduced":
-        cfg = cfg.reduced()
-    model = build(cfg)
-    n = args.nodes
-    R = args.R if args.algo == "mc_dsgt" else 1
-    # gossip rounds one step consumes — and exactly how many we stage/stack
-    # per step, so the consumed window matches the budget accounting
-    wps = engine.make_rule(args.algo, gamma=args.gamma, R=R).weights_per_step
-    local_opt = LOCAL_OPTS[args.local_opt]
-    local_opt = local_opt() if local_opt is not None else None
 
-    # horizon only matters for the non-periodic schedules (resampled
-    # matching, mobility) and realized fault windows; the x4 cushion covers
-    # --restore continuations (wrap past it is benign)
-    horizon = (args.steps + 1) * wps * 4
-    sched = make_weight_schedule(args.topology, n, args.beta,
-                                 horizon=horizon, seed=args.seed,
-                                 er_p=args.er_p, radius=args.radius)
-    fault_models = make_fault_models(args)
-    if fault_models:
-        # ideal plan -> channel degradation -> repair -> (re-)lowering:
-        # the realized window replaces the schedule wholesale, so both
-        # gossip impls (dense staging AND the structured plan path below)
-        # consume the same post-fault matrices
-        sched = sim_faults.realize_weight_schedule(sched, fault_models,
-                                                   rounds=horizon)
-    telem = None
-    if fault_models or args.telemetry or \
-            args.topology in ("geometric-mobility", "waypoint-mobility"):
-        # record only on log steps: the windowed metrics are host-side
-        # numpy over (window, n, n) matrices, cheap but not free per step
-        telem = sim_telemetry.TelemetryRecorder(sched, wps=wps,
-                                                every=args.log_every)
-    stream = token_stream_for(cfg, n, R, args.batch, args.seq, seed=args.seed,
-                              active_vocab=args.active_vocab,
-                              hetero_alpha=args.hetero_alpha)
-    plan = sched.plan(0, sched.period) if args.gossip_impl == "auto" else None
-    init_state, warm_start, train_step = dsteps.make_train_step(
-        model, cfg, algo=args.algo, gamma=args.gamma, R=R,
-        gossip_impl=args.gossip_impl, plan=plan, local_opt=local_opt,
-        pallas_interpret=jax.default_backend() != "tpu")
+def spec_from_args(args: argparse.Namespace) -> exp.ExperimentSpec:
+    """Translate a parsed namespace into a spec: start from the --config
+    baseline (or the dataclass defaults) and apply each explicitly-given
+    flag through its ``FLAG_TO_FIELD`` path."""
+    spec = exp.load(args.config) if getattr(args, "config", None) \
+        else exp.ExperimentSpec()
+    overrides = {FLAG_TO_FIELD[dest]: value
+                 for dest, value in vars(args).items()
+                 if dest in FLAG_TO_FIELD}
+    return exp.with_overrides(spec, overrides)
 
-    state = init_state(jax.random.key(args.seed), n, jnp.float32)
-    state, start_step = driver.restore_or_warm(
-        state, restore=args.restore, load_fn=load_checkpoint,
-        warm=lambda s: warm_start(s, stream.batch_at(0)))
-    if args.restore:
-        print(f"restored step {start_step} from {args.restore}")
 
-    # Stage the whole period's gossip tensors on device ONCE; the jitted
-    # step indexes them by (t mod period) — no per-step stacked()/transfer.
-    staged = driver.stage(
-        sched, wps=wps, impl=("auto" if args.gossip_impl == "auto"
-                              else "dense"), plan=plan,
-        static_t=(args.gossip_impl == "auto"
-                  and train_step.gossip_dispatch == "static"))
-    if args.gossip_impl == "auto":
-        step_fn = driver.bind_step(staged, train_step)
-    else:
-        step_fn = driver.bind_step(
-            staged, lambda state, batch, W, t: train_step(state, batch, W))
-
-    def record(k, t, state, out, dt):
-        loss = float(out["loss"])
-        tl = telem.record(k, t, state, out, dt) if telem is not None else None
-        if k % args.log_every != 0:
-            return None
-        ce = tl["consensus"] if tl is not None else consensus_error(state.x)
-        extra = ""
-        if tl is not None:
-            ed = tl["eff_diameter"]
-            gap = tl["spectral_gap"]
-            extra = (f"  gap {gap if gap is not None else float('nan'):.3f}"
-                     f"  eff_diam {ed if ed is not None else '-'}")
-        print(f"step {k:5d}  T={t:6d}  loss {loss:.4f}  "
-              f"consensus {ce:.3e}{extra}  {dt:.2f}s")
-        return {"step": k, "loss": loss, "consensus": ce,
-                "sec": round(dt, 3)}
-
-    state, history = driver.run_loop(
-        step_fn, state, steps=args.steps, wps=wps, period=staged.period,
-        start_step=start_step, extra_fn=lambda k: stream.batch_at(k + 1),
-        record=record, checkpoint=args.checkpoint,
-        save_fn=save_checkpoint)
-    if args.checkpoint:
-        print(f"saved {args.checkpoint}")
-    if args.telemetry and telem is not None:
-        telem.dump(args.telemetry)
-        print(f"wrote telemetry {args.telemetry}")
-    return history
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    spec = spec_from_args(args)
+    if getattr(args, "dump_config", False):
+        print(exp.to_json(spec, elide_defaults=False))
+        return spec
+    return exp.run(spec).history
 
 
 if __name__ == "__main__":

@@ -1,0 +1,338 @@
+"""repro.exp front-door tests: strict spec (de)serialization, registry
+single-sourcing, spec <-> CLI equivalence (bit-exact losses on dense AND
+auto gossip paths), sweep expansion, and reproducibility manifests."""
+
+import dataclasses
+import json
+import warnings
+
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro import exp
+from repro.launch import train
+
+
+# ---------------------------------------------------------------------------
+# Spec serialization
+# ---------------------------------------------------------------------------
+
+def test_default_spec_elides_to_empty():
+    assert exp.to_dict(exp.ExperimentSpec()) == {}
+    assert exp.from_dict({}) == exp.ExperimentSpec()
+
+
+def test_to_dict_names_only_choices():
+    s = exp.with_overrides(exp.ExperimentSpec(), {
+        "algorithm.name": "dsgd", "channel.link_drop": 0.2})
+    assert exp.to_dict(s) == {"algorithm": {"name": "dsgd"},
+                              "channel": {"link_drop": 0.2}}
+
+
+def test_roundtrip_json():
+    s = exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=8, m=32),
+        data=exp.DataSpec(batch=4, hetero_alpha=0.3),
+        algorithm=exp.AlgorithmSpec(name="gt_local", gamma=0.2),
+        topology=exp.TopologySpec(kind="waypoint-mobility", radius=0.3),
+        channel=exp.ChannelSpec(link_drop=0.2, burst_loss=0.1),
+        run=exp.RunSpec(steps=3, nodes=8, gossip_impl="auto",
+                        telemetry="t.json"))
+    assert exp.from_json(exp.to_json(s)) == s
+    # ...and through an actual json encode/decode cycle of the full form
+    full = json.loads(json.dumps(exp.to_dict(s, elide_defaults=False)))
+    assert exp.from_dict(full) == s
+
+
+def test_unknown_keys_error():
+    with pytest.raises(KeyError, match="unknown section"):
+        exp.from_dict({"algorithmz": {}})
+    with pytest.raises(KeyError, match="unknown key"):
+        exp.from_dict({"algorithm": {"nme": "dsgd"}})
+    with pytest.raises(KeyError, match="unknown key"):
+        exp.from_dict({"run": {"steps": 2, "stepz": 3}})
+
+
+def test_spec_hash_stable_and_sensitive():
+    a, b = exp.ExperimentSpec(), exp.ExperimentSpec()
+    assert exp.spec_hash(a) == exp.spec_hash(b)
+    c = exp.with_field(a, "algorithm.name", "dsgd")
+    assert exp.spec_hash(a) != exp.spec_hash(c)
+    # an int-valued float field hashes like its serialized (float) form
+    d = exp.with_field(a, "algorithm.gamma", 1)
+    assert d == exp.from_dict(exp.to_dict(d))
+    assert exp.spec_hash(d) == exp.spec_hash(exp.from_dict(exp.to_dict(d)))
+
+
+if HAVE_HYPOTHESIS:
+    _floats = st.floats(0.0, 1.0, allow_nan=False)
+    _spec_strategy = st.builds(
+        exp.ExperimentSpec,
+        model=st.builds(exp.ModelRef,
+                        kind=st.sampled_from(exp.MODEL_KINDS),
+                        d=st.integers(1, 256), m=st.integers(1, 512),
+                        rho=_floats),
+        data=st.builds(exp.DataSpec, batch=st.integers(1, 8),
+                       seq=st.integers(1, 128),
+                       hetero_alpha=st.none() | st.floats(0.01, 10.0)),
+        algorithm=st.builds(exp.AlgorithmSpec,
+                            name=st.sampled_from(exp.ALGORITHMS),
+                            gamma=_floats, R=st.integers(1, 4),
+                            local_opt=st.sampled_from(
+                                sorted(exp.LOCAL_OPTS))),
+        topology=st.builds(exp.TopologySpec,
+                           kind=st.sampled_from(sorted(exp.TOPOLOGIES)),
+                           beta=_floats, er_p=_floats, radius=_floats,
+                           local_steps=st.integers(1, 16)),
+        channel=st.builds(exp.ChannelSpec, link_drop=_floats,
+                          burst_loss=_floats, churn=_floats,
+                          straggler=_floats),
+        run=st.builds(exp.RunSpec, steps=st.integers(1, 100),
+                      nodes=st.integers(1, 64), seed=st.integers(0, 2**31),
+                      gossip_impl=st.sampled_from(exp.GOSSIP_IMPLS),
+                      checkpoint=st.none() | st.just("ck.msgpack"),
+                      telemetry=st.none() | st.just("telem.json")))
+else:  # the _hyp stub makes @given skip; the strategy is never drawn
+    _spec_strategy = None
+
+
+@given(_spec_strategy)
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_property(spec):
+    """from_dict(to_dict(s)) == s over randomized specs, elided and full,
+    including a real JSON encode/decode cycle."""
+    assert exp.from_dict(exp.to_dict(spec)) == spec
+    full = json.loads(json.dumps(exp.to_dict(spec, elide_defaults=False)))
+    assert exp.from_dict(full) == spec
+    assert exp.from_json(exp.to_json(spec)) == spec
+
+
+# ---------------------------------------------------------------------------
+# Overrides + sweep
+# ---------------------------------------------------------------------------
+
+def test_with_field_and_bad_paths():
+    s = exp.with_field(exp.ExperimentSpec(), "run.steps", 7)
+    assert s.run.steps == 7
+    with pytest.raises(KeyError):
+        exp.with_field(s, "run", 1)
+    with pytest.raises(KeyError):
+        exp.with_field(s, "runs.steps", 1)
+    with pytest.raises(KeyError):
+        exp.with_field(s, "run.stepz", 1)
+
+
+def test_sweep_grid_order():
+    grid = exp.sweep(exp.ExperimentSpec(), {
+        "algorithm.name": ["dsgd", "mc_dsgt"],
+        "channel.link_drop": [0.0, 0.2]})
+    assert len(grid) == 4
+    assert [(g.algorithm.name, g.channel.link_drop) for g in grid] == \
+        [("dsgd", 0.0), ("dsgd", 0.2), ("mc_dsgt", 0.0), ("mc_dsgt", 0.2)]
+    assert len({exp.spec_hash(g) for g in grid}) == 4
+
+
+# ---------------------------------------------------------------------------
+# Registry single-sourcing (the CLI derives its vocabularies)
+# ---------------------------------------------------------------------------
+
+def test_cli_choices_come_from_registries():
+    actions = {a.dest: a for a in train.build_parser()._actions}
+    assert list(actions["topology"].choices) == list(exp.TOPOLOGIES)
+    assert list(actions["algo"].choices) == list(exp.ALGORITHMS)
+    assert list(actions["local_opt"].choices) == sorted(exp.LOCAL_OPTS)
+    assert list(actions["gossip_impl"].choices) == list(exp.GOSSIP_IMPLS)
+
+
+def test_flag_map_paths_all_resolve():
+    s = exp.ExperimentSpec()
+    for dest, path in train.FLAG_TO_FIELD.items():
+        exp.with_field(s, path, getattr(
+            getattr(s, path.split(".")[0]), path.split(".")[1]))
+
+
+def test_every_registered_topology_builds():
+    for kind in exp.TOPOLOGIES:
+        sched = exp.build_topology(exp.TopologySpec(kind=kind), 8,
+                                   horizon=12, seed=0)
+        assert sched.n == 8
+        assert sched.period >= 1
+
+
+def test_unknown_registry_values_error_with_choices():
+    with pytest.raises(ValueError, match="topology.kind"):
+        exp.build(exp.with_field(exp.ExperimentSpec(), "topology.kind", "x"))
+    with pytest.raises(ValueError, match="algorithm.name"):
+        exp.build(exp.with_field(exp.ExperimentSpec(), "algorithm.name", "x"))
+    with pytest.raises(ValueError, match="gossip_impl"):
+        exp.build(exp.with_field(exp.ExperimentSpec(),
+                                 "run.gossip_impl", "x"))
+
+
+# ---------------------------------------------------------------------------
+# Config file round trip (flags override file)
+# ---------------------------------------------------------------------------
+
+def test_dump_config_then_config_roundtrip(tmp_path):
+    spec = train.main(["--topology", "federated", "--algo", "local_sgd",
+                       "--gossip-impl", "auto", "--dump-config"])
+    assert isinstance(spec, exp.ExperimentSpec)
+    assert spec.topology.kind == "federated"
+    path = tmp_path / "fed.json"
+    path.write_text(exp.to_json(spec))
+    # file is the baseline; explicit flags override it
+    merged = train.main(["--config", str(path), "--algo", "gt_local",
+                         "--dump-config"])
+    assert merged == exp.with_field(spec, "algorithm.name", "gt_local")
+    # a manifest is accepted as a --config baseline too
+    mpath = tmp_path / "fed.manifest.json"
+    mpath.write_text(json.dumps(exp.resolved_manifest(spec)))
+    assert train.main(["--config", str(mpath), "--dump-config"]) == spec
+
+
+# ---------------------------------------------------------------------------
+# Spec <-> CLI equivalence: bit-identical losses through both entries
+# ---------------------------------------------------------------------------
+
+_EQUIV = [
+    # (algo, topology, gossip_impl, link_drop) — covers {mc_dsgt, local_sgd}
+    # x {sun, waypoint-mobility + 20% drop} with dense AND auto paths
+    ("mc_dsgt", "sun", "dense", 0.0),
+    ("mc_dsgt", "waypoint-mobility", "auto", 0.2),
+    ("local_sgd", "sun", "auto", 0.0),
+    ("local_sgd", "waypoint-mobility", "dense", 0.2),
+]
+
+
+@pytest.mark.parametrize("algo,topo,impl,drop", _EQUIV)
+def test_spec_cli_equivalence(algo, topo, impl, drop):
+    flags = ["--arch", "qwen1.5-0.5b", "--preset", "reduced",
+             "--steps", "2", "--nodes", "4", "--batch", "1", "--seq", "16",
+             "--algo", algo, "--topology", topo, "--gossip-impl", impl]
+    if drop:
+        flags += ["--link-drop", str(drop)]
+    spec = exp.ExperimentSpec(
+        data=exp.DataSpec(batch=1, seq=16),
+        algorithm=exp.AlgorithmSpec(name=algo),
+        topology=exp.TopologySpec(kind=topo),
+        channel=exp.ChannelSpec(link_drop=drop),
+        run=exp.RunSpec(steps=2, nodes=4, gossip_impl=impl))
+    cli_hist = train.main(flags)
+    spec_hist = exp.run(spec, quiet=True).history
+    assert [h["loss"] for h in cli_hist] == [h["loss"] for h in spec_hist]
+    assert [h["consensus"] for h in cli_hist] == \
+        [h["consensus"] for h in spec_hist]
+
+
+# ---------------------------------------------------------------------------
+# Reproducibility manifests
+# ---------------------------------------------------------------------------
+
+def _tiny_arch_spec(**run_kw):
+    run_kw = {"steps": 2, "nodes": 4, **run_kw}
+    return exp.ExperimentSpec(
+        data=exp.DataSpec(batch=1, seq=16),
+        algorithm=exp.AlgorithmSpec(name="dsgd", gamma=0.05),
+        run=exp.RunSpec(**run_kw))
+
+
+def test_manifest_written_and_restore_mismatch_warns(tmp_path):
+    ckpt = str(tmp_path / "ck.msgpack")
+    spec = _tiny_arch_spec(checkpoint=ckpt)
+    exp.run(spec, quiet=True)
+
+    mpath = exp.manifest_path(ckpt)
+    m = exp.load_manifest(mpath)
+    assert m["spec_parsed"] == spec
+    assert m["spec_hash"] == exp.spec_hash(spec)
+    assert m["realized"]["weights_per_step"] == 1
+    assert m["realized"]["seed"] == 0
+    assert m["realized"]["period"] >= 1
+
+    # same scenario, different step count: a legal continuation — no
+    # spec-mismatch warning
+    cont = _tiny_arch_spec(restore=ckpt, steps=1)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        exp.run(cont, quiet=True)
+    assert not [w for w in caught if "manifest" in str(w.message)]
+
+    # changed scenario field (gamma): restore proceeds but warns
+    changed = exp.with_field(_tiny_arch_spec(restore=ckpt, steps=1),
+                             "algorithm.gamma", 0.07)
+    with pytest.warns(UserWarning, match="algorithm.gamma"):
+        exp.run(changed, quiet=True)
+
+    # resume IN PLACE (checkpoint == restore, the canonical continuation):
+    # the ORIGINAL manifest must be compared before being overwritten
+    inplace = exp.with_field(
+        _tiny_arch_spec(restore=ckpt, checkpoint=ckpt, steps=1),
+        "algorithm.gamma", 0.09)
+    with pytest.warns(UserWarning, match="algorithm.gamma"):
+        exp.run(inplace, quiet=True)
+    assert exp.load_manifest(mpath)["spec_parsed"] == inplace  # now updated
+
+
+def test_telemetry_manifest_written(tmp_path):
+    telem = str(tmp_path / "telem.json")
+    spec = exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=8, m=16),
+        data=exp.DataSpec(batch=4),
+        algorithm=exp.AlgorithmSpec(name="dsgd", gamma=0.3),
+        topology=exp.TopologySpec(kind="geometric-mobility"),
+        run=exp.RunSpec(steps=2, nodes=4, telemetry=telem))
+    res = exp.run(spec)
+    assert res.telemetry is not None and res.telemetry.history
+    m = exp.load_manifest(exp.manifest_path(telem))
+    assert m["spec_parsed"] == spec
+    assert m["realized"]["plan_kinds"] is None  # dense impl: no plan
+
+
+def test_corrupt_manifest_warns_not_raises(tmp_path):
+    ckpt = str(tmp_path / "ck.msgpack")
+    (tmp_path / "ck.msgpack.spec.json").write_text(
+        json.dumps({"format": "repro.exp/manifest/v1", "spec": {"run": 3},
+                    "spec_hash": "x", "realized": {}}))
+    with pytest.warns(UserWarning, match="unreadable spec manifest"):
+        assert exp.check_restore_spec(ckpt, exp.ExperimentSpec()) is None
+
+
+def test_diff_specs_ignores_run_shape():
+    a = exp.ExperimentSpec()
+    b = exp.with_overrides(a, {"run.steps": 99, "run.checkpoint": "x",
+                               "run.telemetry": "y"})
+    assert exp.diff_specs(a, b) == []
+    c = exp.with_overrides(a, {"topology.kind": "federated",
+                               "run.nodes": 8})
+    assert exp.diff_specs(a, c) == ["run.nodes", "topology.kind"]
+
+
+# ---------------------------------------------------------------------------
+# Logreg runtime guardrails + legacy surface
+# ---------------------------------------------------------------------------
+
+def test_logreg_rejects_arch_only_features():
+    base = exp.ExperimentSpec(model=exp.ModelRef(kind="logreg"))
+    with pytest.raises(ValueError, match="host runtime"):
+        exp.build(exp.with_field(base, "run.gossip_impl", "pallas"))
+    with pytest.raises(ValueError, match="checkpoint"):
+        exp.build(exp.with_field(base, "run.checkpoint", "x"))
+
+
+def test_legacy_make_weight_schedule_import():
+    # the historical import site keeps working and delegates to the registry
+    from repro.launch.train import make_weight_schedule
+    sched = make_weight_schedule("sun", 8, 0.75)
+    assert sched.n == 8
+    assert sched.period >= 1
+
+
+def test_example_spec_literals_roundtrip():
+    """Every example's SPECS pool serializes strictly (running them is the
+    CI spec-smoke job, repro.exp.validate)."""
+    from repro.exp import validate as V
+    seen = 0
+    for example, name, spec in V.iter_example_specs("examples"):
+        assert exp.from_json(exp.to_json(spec)) == spec, (example, name)
+        seen += 1
+    assert seen >= 6  # quickstart x3, federated x3, wireless x2, figure2 x1

@@ -10,7 +10,7 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core import algorithms as alg, gossip, topology as topo
-from repro.launch.train import make_weight_schedule
+from repro.exp import make_weight_schedule
 
 PLANNABLE = ["sun", "ring", "one-peer-exp", "static-exp", "federated",
              "complete", "random-matching", "resampled-matching",
