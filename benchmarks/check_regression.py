@@ -1,0 +1,136 @@
+"""Throughput-regression gate over the BENCH json artifacts.
+
+Compares the freshly measured BENCH files in ``--current`` (what
+``python -m benchmarks.run --quick --only ...`` just wrote, default
+``experiments/bench``) against the checked-in baselines in
+``--baseline`` (default ``benchmarks/baselines``).  Rows are matched by
+``name`` within the same BENCH_*.json file; a matched row FAILS when its
+throughput dropped by more than ``--threshold`` (default 25%) relative
+to the baseline.
+
+The gate is deliberately one-sided and loose: the baselines were taken
+on a small shared CPU container, so run-to-run noise of +-15% is normal
+and only a large sustained drop is treated as a real regression.  Rows
+present on only one side are reported but never fail the gate (new
+benches land before their baseline; retired benches linger in the
+baseline until it is regenerated).
+
+    python -m benchmarks.check_regression
+    python -m benchmarks.check_regression --threshold 0.4 --only obs
+
+Exit status: 0 = no regression, 1 = at least one row regressed,
+2 = nothing to compare (missing dirs or no overlapping files).
+
+Regenerating baselines (after an intentional perf change)::
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only <bench>
+    cp experiments/bench/BENCH_<bench>.json benchmarks/baselines/
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    """name -> row for one BENCH json (a list of row dicts)."""
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows if "name" in r}
+
+
+def compare_file(base_path: str, cur_path: str, threshold: float):
+    """Yield (name, baseline_tp, current_tp, ratio, status) per row.
+
+    status: 'ok' | 'regressed' | 'baseline-only' | 'current-only'
+    ratio is current/baseline throughput (1.0 = unchanged), None when a
+    side is missing or reports no throughput.
+    """
+    base, cur = load_rows(base_path), load_rows(cur_path)
+    for name in sorted(set(base) | set(cur)):
+        if name not in cur:
+            yield name, base[name].get("throughput"), None, None, \
+                "baseline-only"
+            continue
+        if name not in base:
+            yield name, None, cur[name].get("throughput"), None, \
+                "current-only"
+            continue
+        b = base[name].get("throughput")
+        c = cur[name].get("throughput")
+        if not b or c is None:
+            yield name, b, c, None, "ok"  # no throughput to judge
+            continue
+        ratio = c / b
+        status = "regressed" if ratio < 1.0 - threshold else "ok"
+        yield name, b, c, ratio, status
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="dir of checked-in BENCH_*.json baselines")
+    ap.add_argument("--current", default="experiments/bench",
+                    help="dir of freshly measured BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional throughput drop "
+                         "(0.25 = fail below 75%% of baseline)")
+    ap.add_argument("--only", default=None,
+                    help="restrict to BENCH files whose name contains "
+                         "this substring (e.g. 'obs', 'engine')")
+    args = ap.parse_args(argv)
+
+    pattern = os.path.join(args.baseline, "BENCH_*.json")
+    base_paths = sorted(glob.glob(pattern))
+    if args.only:
+        base_paths = [p for p in base_paths if args.only in
+                      os.path.basename(p)]
+    if not base_paths:
+        print(f"check_regression: no baselines match {pattern}",
+              file=sys.stderr)
+        return 2
+
+    compared = 0
+    regressed: list[str] = []
+    for base_path in base_paths:
+        fname = os.path.basename(base_path)
+        cur_path = os.path.join(args.current, fname)
+        if not os.path.exists(cur_path):
+            print(f"-- {fname}: not measured in {args.current}, skipped")
+            continue
+        print(f"-- {fname}")
+        for name, b, c, ratio, status in compare_file(
+                base_path, cur_path, args.threshold):
+            if status in ("ok", "regressed"):
+                compared += 1
+            mark = {"ok": "ok ", "regressed": "REG", "baseline-only": "?- ",
+                    "current-only": "-? "}[status]
+            rtxt = f"{ratio:5.2f}x" if ratio is not None else "   -  "
+            btxt = f"{b:12.1f}" if b is not None else "           -"
+            ctxt = f"{c:12.1f}" if c is not None else "           -"
+            print(f"   {mark} {name:32s} base={btxt} cur={ctxt} {rtxt}")
+            if status == "regressed":
+                regressed.append(f"{fname}:{name}")
+    if compared == 0:
+        print("check_regression: no overlapping rows to compare",
+              file=sys.stderr)
+        return 2
+    if regressed:
+        print(f"\ncheck_regression: {len(regressed)} row(s) dropped more "
+              f"than {args.threshold:.0%} below baseline throughput:")
+        for r in regressed:
+            print(f"  {r}")
+        return 1
+    print(f"\ncheck_regression: {compared} row(s) within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

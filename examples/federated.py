@@ -12,6 +12,7 @@ that shows exactly where FedAvg's communication savings come from.
 """
 
 from repro import exp
+from repro.obs import Console
 
 N = 16
 T = 480
@@ -52,12 +53,11 @@ SPECS = {"fedavg4_dsgd": SCHEDULE_SPECS["fedavg(local=4)"],
          "dirichlet_gt_local": RULE_SPECS["gt_local"]}
 
 
-def main():
-    print(f"n={N}  budget T={T}  DSGD with gamma=0.4 over each schedule")
-    print(f"{'schedule':18s} {'final ||grad f(x_bar)||^2':>26s} "
-          f"{'comm rounds':>12s}  gossip plan (one period)")
+def main(con: Console = None):
+    con = con or Console.from_argv()
+    con.print(f"n={N}  budget T={T}  DSGD with gamma=0.4 over each schedule")
     for name, spec in SCHEDULE_SPECS.items():
-        res = exp.run(spec)
+        res = exp.run(spec, quiet=con.quiet)
         # the gossip plan names each round's lowering; `empty` rounds are
         # the local steps — the auto dispatcher skips them entirely, so
         # FedAvg's saved communication is visible in the plan itself
@@ -66,23 +66,24 @@ def main():
             * (T // plan.period)
         kinds = "+".join(f"{plan.kinds.count(k)}x{k}"
                          for k in dict.fromkeys(plan.kinds))
-        print(f"{name:18s} {float(res.history[-1][1]):26.6f} "
-              f"{comm:12d}  {kinds}")
-    print("\nFedAvg trades convergence for (local_steps+1)x less "
-          "communication — the time-varying-network view makes that a "
-          "topology choice, not a different algorithm, and the gossip plan "
-          "lowers each phase to its cheapest collective (empty rounds: "
-          "none; the averaging round: one all-reduce).")
+        con.event("schedule_result", schedule=name,
+                  grad_sq=float(res.history[-1][1]), comm_rounds=comm,
+                  plan=kinds)
+    con.print("\nFedAvg trades convergence for (local_steps+1)x less "
+              "communication — the time-varying-network view makes that a "
+              "topology choice, not a different algorithm, and the gossip "
+              "plan lowers each phase to its cheapest collective (empty "
+              "rounds: none; the averaging round: one all-reduce).")
 
     # local_sgd is FedAvg proper (mix, then local step); gt_local adds a
     # gradient tracker that keeps tracking through the local-only rounds —
     # the heterogeneity correction FedAvg lacks.
-    print(f"\nDirichlet(alpha=0.1) label-skew partition, fedavg(local=4), "
-          f"budget T={T}:")
+    con.print(f"\nDirichlet(alpha=0.1) label-skew partition, "
+              f"fedavg(local=4), budget T={T}:")
     for name, spec in RULE_SPECS.items():
-        res = exp.run(spec)
-        print(f"  {name:10s} final ||grad f(x_bar)||^2 = "
-              f"{float(res.history[-1][1]):.6f}")
+        res = exp.run(spec, quiet=con.quiet)
+        con.event("rule_result", rule=name,
+                  grad_sq=float(res.history[-1][1]))
 
 
 if __name__ == "__main__":

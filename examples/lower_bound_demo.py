@@ -11,9 +11,11 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.core import gossip, lower_bound as lb, topology as topo
+from repro.obs import Console
 
 
-def main():
+def main(con: Console = None):
+    con = con or Console.from_argv()
     n, beta, T = 16, 1 - 1 / 16, 96
     inst = lb.make_instance2(L=1.0, Delta=10.0, n=n, beta=beta, T=T)
     I1, I2 = inst.set1, inst.set2
@@ -22,9 +24,9 @@ def main():
                                    period=sched_graphs.period)
     wsched = gossip.theorem3_weight_schedule(n, beta, avoid=I1 + I2)
 
-    print(f"n={n} beta={beta:.4f}  effective distance(I1, I2) = {dist}")
-    print(f"zero-chain dim d = {inst.d}; theory cap on prog ~ T/dist + 1 = "
-          f"{T // dist + 1}")
+    con.print(f"n={n} beta={beta:.4f}  effective distance(I1, I2) = {dist}")
+    con.print(f"zero-chain dim d = {inst.d}; theory cap on prog ~ "
+              f"T/dist + 1 = {T // dist + 1}")
 
     def grad_fn(xs, key):
         return inst.grad_stacked(xs)  # lossless oracle (Instance 2 uses full grads)
@@ -34,7 +36,6 @@ def main():
     state = alg.warm_start(algo, state, grad_fn, jax.random.key(0))
     step = jax.jit(algo.step, static_argnums=1)
     t = 0
-    print(f"{'round k':>8s} {'T':>6s} {'max prog':>9s} {'cap':>5s}")
     for k in range(T // 2):
         Ws = jnp.asarray(wsched.stacked(t, 2))
         state = step(state, grad_fn, Ws, jax.random.key(k))
@@ -42,9 +43,11 @@ def main():
         if (k + 1) % 8 == 0:
             progs = [int(lb.prog(state.x[i])) for i in range(n)]
             cap = t // dist + 1
-            print(f"{k + 1:8d} {t:6d} {max(progs):9d} {cap:5d}")
+            con.event("progress", round=k + 1, T=t, max_prog=max(progs),
+                      cap=cap)
             assert max(progs) <= cap + 1, "progress exceeded the lower-bound cap!"
-    print("\nprog(x) stayed within the Theorem 4 information-propagation cap.")
+    con.print("\nprog(x) stayed within the Theorem 4 "
+              "information-propagation cap.")
 
 
 if __name__ == "__main__":

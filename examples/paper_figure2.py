@@ -20,6 +20,7 @@ import os
 
 from repro import exp
 from repro.configs.logreg_paper import COVTYPE, MNIST
+from repro.obs import Console
 
 
 def base_spec(lc, seed: int = 0) -> exp.ExperimentSpec:
@@ -39,7 +40,9 @@ SPECS = {
 }
 
 
-def run_setup(lc, T_budget: int, gamma: float, seed: int = 0):
+def run_setup(lc, T_budget: int, gamma: float, seed: int = 0,
+              con: Console = None):
+    con = con or Console.from_argv()
     base = base_spec(lc, seed)
 
     # per-algorithm step-size tuning over a small grid (the paper reports
@@ -52,7 +55,7 @@ def run_setup(lc, T_budget: int, gamma: float, seed: int = 0):
                 "algorithm.name": algo, "algorithm.gamma": g,
                 "algorithm.R": R, "run.steps": steps,
                 "run.eval_every": max(1, steps // 40)})
-            res = exp.run(spec)
+            res = exp.run(spec, quiet=con.quiet)
             pts = [(t, float(v)) for t, v in res.history]
             if best is None or pts[-1][1] < best[-1][1]:
                 best = pts
@@ -66,7 +69,7 @@ def run_setup(lc, T_budget: int, gamma: float, seed: int = 0):
     curves[f"mc_dsgt(R={lc.R})"] = tuned(
         "mc_dsgt", lc.R, T_budget // (2 * lc.R), mc_grid)
     for name, pts in curves.items():
-        print(f"  {lc.name} {name:14s} final ||grad||^2 = {pts[-1][1]:.6f}")
+        con.event("curve", setup=lc.name, algo=name, grad_sq=pts[-1][1])
     return curves
 
 
@@ -75,14 +78,16 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=400,
                     help="total per-node round budget T")
     ap.add_argument("--out", default="experiments")
+    ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+    con = Console(quiet=args.quiet)
 
     os.makedirs(args.out, exist_ok=True)
     all_results = {}
     for lc, gamma in [(MNIST, 0.5), (COVTYPE, 0.5)]:
-        print(f"setup {lc.name}: n={lc.n_nodes} |C|={lc.center_size} "
-              f"R={lc.R} rho={lc.rho}")
-        curves = run_setup(lc, args.steps, gamma)
+        con.print(f"setup {lc.name}: n={lc.n_nodes} |C|={lc.center_size} "
+                  f"R={lc.R} rho={lc.rho}")
+        curves = run_setup(lc, args.steps, gamma, con=con)
         all_results[lc.name] = curves
         path = os.path.join(args.out, f"figure2_{lc.name}.csv")
         with open(path, "w") as f:
@@ -90,7 +95,7 @@ def main(argv=None):
             for name, pts in curves.items():
                 for t, g in pts:
                     f.write(f"{name},{t},{g}\n")
-        print(f"  wrote {path}")
+        con.event("wrote", path=path)
 
     # the figure's claim: MC-DSGT converges lower at equal budget (or to
     # parity when the random schedule mixes fast and both sit at the
@@ -104,8 +109,8 @@ def main(argv=None):
             verdict = "matches (both at the noise floor)"
         else:
             verdict = "LOSES to"
-        print(f"{name}: MC-DSGT {verdict} DSGD "
-              f"({mc:.6f} vs {final['dsgd']:.6f})")
+        con.print(f"{name}: MC-DSGT {verdict} DSGD "
+                  f"({mc:.6f} vs {final['dsgd']:.6f})")
     return all_results
 
 

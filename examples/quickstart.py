@@ -13,6 +13,7 @@ global gradient norm ||∇f(x̄)||² per oracle/communication budget T.
 import dataclasses
 
 from repro import exp
+from repro.obs import Console
 
 N = 16
 BETA = 1 - 1 / N          # worst connectivity Theorem 3 allows
@@ -43,20 +44,21 @@ SPECS = {
 }
 
 
-def main():
-    print(f"n={N} beta={BETA:.4f} (sun-shaped, rotating centers, "
-          f"|C|={max(1, int(N * (1 - BETA)))})  budget T={T_BUDGET}")
-    print(f"{'algo':10s} {'T':>6s} {'||grad f(x_bar)||^2':>22s}")
+def main(con: Console = None):
+    con = con or Console.from_argv()
+    con.print(f"n={N} beta={BETA:.4f} (sun-shaped, rotating centers, "
+              f"|C|={max(1, int(N * (1 - BETA)))})  budget T={T_BUDGET}")
     results = {}
     for name, spec in SPECS.items():
-        res = exp.run(spec)
-        for t, g in res.history[-1:]:
-            print(f"{name:10s} {t:6d} {float(g):22.6f}")
-        results[name] = float(res.history[-1][1])
+        res = exp.run(spec, quiet=con.quiet)
+        t, g = res.history[-1]
+        con.event("result", algo=name, T=int(t), grad_sq=float(g))
+        results[name] = float(g)
 
     assert results["mc_dsgt"] <= results["dsgd"], \
         "MC-DSGT should dominate DSGD on a poorly-connected graph"
-    print("\nMC-DSGT <= DSGD at equal budget: paper Table 1 ordering holds.")
+    con.print("\nMC-DSGT <= DSGD at equal budget: paper Table 1 "
+              "ordering holds.")
     return results
 
 

@@ -11,6 +11,7 @@ the ~0.5B config).
 import argparse
 
 from repro.launch.train import main as train_main
+from repro.obs import Console
 
 
 def main(argv=None):
@@ -20,18 +21,28 @@ def main(argv=None):
     ap.add_argument("--preset", default="reduced")
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--checkpoint", default="experiments/lm_ckpt.msgpack")
+    ap.add_argument("--metrics", default=None,
+                    help="repro.obs JSONL event-log path")
+    ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+    con = Console(quiet=args.quiet)
 
-    history = train_main([
+    flags = [
         "--arch", args.arch, "--preset", args.preset,
         "--steps", str(args.steps), "--nodes", str(args.nodes),
         "--beta", "0.875", "--topology", "sun", "--algo", "mc_dsgt",
         "--R", "2", "--gamma", "0.1", "--batch", "4", "--seq", "64",
         "--checkpoint", args.checkpoint, "--log-every", "10",
-    ])
+    ]
+    if args.metrics:
+        flags += ["--metrics", args.metrics]
+    if args.quiet:
+        flags += ["--quiet"]
+    history = train_main(flags)
     first, last = history[0]["loss"], history[-1]["loss"]
-    print(f"\nloss {first:.4f} -> {last:.4f} over {args.steps} steps "
-          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    con.event("trained", loss_first=first, loss_last=last,
+              steps=args.steps,
+              improved=str(last < first).lower())
     return history
 
 

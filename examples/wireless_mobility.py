@@ -16,6 +16,7 @@ telemetry wiring all come from ``run(spec)``.
 import numpy as np
 
 from repro import exp
+from repro.obs import Console
 
 N = 16
 T = 320                    # gossip/oracle budget per run
@@ -57,34 +58,33 @@ def median(vals):
     return float(np.median(vals)) if vals else None
 
 
-def main():
-    print(f"n={N}  random-waypoint mobility (radius=0.45)  "
-          f"non-iid Dirichlet(0.3) data  budget T={T}")
-    print(f"{'algo':9s} {'drop':>5s} {'||grad f(x_bar)||^2':>20s} "
-          f"{'consensus':>10s} {'gap~':>7s} {'eff_diam~':>9s} "
-          f"{'dropped rounds':>14s}")
+def main(con: Console = None):
+    con = con or Console.from_argv()
+    con.print(f"n={N}  random-waypoint mobility (radius=0.45)  "
+              f"non-iid Dirichlet(0.3) data  budget T={T}")
     final = {}
     for drop in DROPS:
         for name in _ALGOS:
-            res = exp.run(_spec(name, drop))
+            res = exp.run(_spec(name, drop), quiet=con.quiet)
             telem = res.telemetry  # created by run(): mobility => recorder
             g = float(res.history[-1][1])
             gap = median([e["spectral_gap"] for e in telem.history])
             diam = median([e["eff_diameter"] for e in telem.history])
             last = telem.history[-1]
             empty = last["kinds"].get("empty", 0)
-            print(f"{name:9s} {drop:5.1f} {g:20.6f} "
-                  f"{last['consensus']:10.4f} {gap:7.3f} "
-                  f"{diam if diam is not None else float('nan'):9.1f} "
-                  f"{empty:8d}/{last['window'][1] - last['window'][0]} "
-                  f"(last window)")
+            con.event("result", algo=name, drop=drop, grad_sq=g,
+                      consensus=last["consensus"], spectral_gap=gap,
+                      eff_diameter=(diam if diam is not None
+                                    else float("nan")),
+                      dropped=empty,
+                      window=last["window"][1] - last["window"][0])
             final[(name, drop)] = g
 
-    print("\nGradient tracking survives the lossy channel: at 20% and 40% "
-          "link drop the tracked runs (mc_dsgt, gt_local) keep converging "
-          "while plain DSGD pays the full heterogeneity bias; the realized "
-          "effective diameter and spectral gap quantify exactly how much "
-          "mixing the channel destroyed.")
+    con.print("\nGradient tracking survives the lossy channel: at 20% and "
+              "40% link drop the tracked runs (mc_dsgt, gt_local) keep "
+              "converging while plain DSGD pays the full heterogeneity "
+              "bias; the realized effective diameter and spectral gap "
+              "quantify exactly how much mixing the channel destroyed.")
     assert final[("mc_dsgt", 0.4)] < final[("mc_dsgt", 0.0)] * 50, \
         "MC-DSGT should degrade gracefully under 40% loss"
     return final

@@ -328,9 +328,13 @@ def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm
             rule, x0, opt_init=local_opt.init if local_opt else None))
 
     def step(state: AlgoState, grad_fn: GradFn, weights: jax.Array,
-             key: jax.Array) -> AlgoState:
-        es, _ = engine.step(rule, _to_engine(state),
-                            _ops(grad_fn, weights, key))
+             key: jax.Array, obs: tuple = ()) -> AlgoState:
+        """One round; with ``obs`` metric names (repro.obs), returns
+        ``(state, obs_dict)`` — the engine's in-jit scalars."""
+        es, aux = engine.step(rule, _to_engine(state),
+                              _ops(grad_fn, weights, key), obs=obs)
+        if obs:
+            return _to_algo(es), aux[1]
         return _to_algo(es)
 
     def warm(state: AlgoState, grad_fn: GradFn, key: jax.Array) -> AlgoState:
@@ -361,16 +365,18 @@ def plan_step(algo: DecentralizedAlgorithm, plan, *, mesh=None,
                     else (lambda g, s: (g, s)))
 
     def pstep(state: AlgoState, grad_fn: GradFn, tensors, t,
-              key: jax.Array) -> AlgoState:
+              key: jax.Array, obs: tuple = ()) -> AlgoState:
         ops = engine.EngineOps(
             mix=lambda off, r, tree: mixer(tensors, t + off, r, tree),
             grad=lambda x: (None, engine._accumulate(grad_fn, x, key,
                                                      rule.R)),
             local_update=local_update,
             cast_aux=lambda tree: tree)
-        es, _ = engine.step(rule, engine.EngineState(
-            state.x, state.h, state.g_prev, state.opt_state, state.k), ops)
-        return AlgoState(es.x, es.h, es.g_prev, es.opt, es.k)
+        es, aux = engine.step(rule, engine.EngineState(
+            state.x, state.h, state.g_prev, state.opt_state, state.k), ops,
+            obs=obs)
+        new = AlgoState(es.x, es.h, es.g_prev, es.opt, es.k)
+        return (new, aux[1]) if obs else new
 
     pstep.dispatch = mixer.dispatch
     return pstep
@@ -433,7 +439,8 @@ def warm_start(algo: DecentralizedAlgorithm, state: AlgoState,
 def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
         weight_schedule, num_steps: int, key: jax.Array,
         eval_fn: Optional[Callable[[PyTree], Any]] = None,
-        eval_every: int = 1, gossip_impl: str = "dense", telemetry=None):
+        eval_every: int = 1, gossip_impl: str = "dense", telemetry=None,
+        obs: tuple = (), tracer=None):
     """Host-side training loop over a :class:`repro.core.gossip.WeightSchedule`.
 
     The schedule is staged on device ONCE up front — one period (or, for
@@ -451,4 +458,5 @@ def run(algo: DecentralizedAlgorithm, x0: PyTree, grad_fn: GradFn,
     return driver.run_algorithm(algo, x0, grad_fn, weight_schedule,
                                 num_steps, key, eval_fn=eval_fn,
                                 eval_every=eval_every,
-                                gossip_impl=gossip_impl, telemetry=telemetry)
+                                gossip_impl=gossip_impl, telemetry=telemetry,
+                                obs=obs, tracer=tracer)

@@ -15,6 +15,7 @@ transfer.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Optional
@@ -128,7 +129,7 @@ def run_loop(step, state, *, steps: int, wps: int, period: int,
              start_step: int = 0, extra_fn: Optional[Callable] = None,
              record: Optional[Callable] = None,
              checkpoint: Optional[str] = None, checkpoint_every: int = 50,
-             save_fn=None):
+             save_fn=None, tracer=None):
     """The training loop every runtime shares.
 
     ``step(state, extra, t)`` — a :func:`bind_step` result; ``t`` advances
@@ -138,25 +139,37 @@ def run_loop(step, state, *, steps: int, wps: int, period: int,
     state, out, dt)`` is called after every step; non-None returns are
     appended to the history.  ``save_fn(path, state, step)`` runs every
     ``checkpoint_every`` steps and once at the end.
+
+    ``tracer`` is an optional :class:`repro.obs.trace.Tracer`: each loop
+    phase (``data`` = extra_fn, ``step`` = the jitted step dispatch,
+    ``telemetry`` = the record hook, ``checkpoint`` = save_fn) runs inside
+    a wall-clock span + ``jax.profiler.TraceAnnotation``.
     """
+    span = (tracer.span if tracer is not None
+            else (lambda phase: contextlib.nullcontext()))
     history = []
     t = start_step * wps
     last = start_step + steps - 1
     for k in range(start_step, start_step + steps):
-        extra = extra_fn(k) if extra_fn is not None else None
+        with span("data"):
+            extra = extra_fn(k) if extra_fn is not None else None
         t0 = time.time()
-        state, out = step(state, extra, t % period)
+        with span("step"):
+            state, out = step(state, extra, t % period)
         dt = time.time() - t0
         t += wps
         if record is not None:
-            rec = record(k, t, state, out, dt)
+            with span("telemetry"):
+                rec = record(k, t, state, out, dt)
             if rec is not None:
                 history.append(rec)
         if checkpoint and save_fn is not None and \
                 (k + 1) % checkpoint_every == 0 and k != last:
-            save_fn(checkpoint, state, k + 1)
+            with span("checkpoint"):
+                save_fn(checkpoint, state, k + 1)
     if checkpoint and save_fn is not None:
-        save_fn(checkpoint, state, start_step + steps)
+        with span("checkpoint"):
+            save_fn(checkpoint, state, start_step + steps)
     return state, history
 
 
@@ -166,7 +179,8 @@ def run_loop(step, state, *, steps: int, wps: int, period: int,
 
 def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
                   key: jax.Array, eval_fn=None, eval_every: int = 1,
-                  gossip_impl: str = "dense", plan=None, telemetry=None):
+                  gossip_impl: str = "dense", plan=None, telemetry=None,
+                  obs: tuple = (), tracer=None):
     """Drive a host :class:`repro.core.algorithms.DecentralizedAlgorithm`
     over a :class:`repro.core.gossip.WeightSchedule`.
 
@@ -175,8 +189,16 @@ def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
     mixes via :func:`repro.core.algorithms.plan_step` — the same per-round
     structured dispatch the distributed runtime uses (``plan`` overrides
     the default one-period plan).  ``telemetry`` is an optional
-    :class:`repro.sim.telemetry.TelemetryRecorder` (or any object with the
-    ``record(k, t, state, out, dt)`` hook signature) invoked every step.
+    :class:`repro.sim.telemetry.TelemetryRecorder` or
+    :class:`repro.obs.metrics.ObsRecorder` (anything with the
+    ``record(k, t, state, out, dt)`` hook signature) invoked every step;
+    when it also exposes ``eval_event(k, t, value)``, every recorded
+    ``eval_fn`` point is forwarded to it (the optimality-gap feed).
+
+    ``obs`` names in-jit metric scalars (:data:`repro.core.engine.
+    OBS_METRICS`) to compute inside the step; they arrive at the record
+    hook as ``out["obs"]`` device scalars.  ``tracer`` adds per-phase
+    wall-clock spans to the loop (see :func:`run_loop`).
 
     Returns (final_state, history) where history records ``eval_fn`` of the
     node-mean model x̄ every ``eval_every`` steps (plus the final step),
@@ -188,6 +210,7 @@ def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
     state = algo.warm(state, grad_fn, k0)
     wps = algo.weights_per_step
     total = max(1, num_steps * wps)
+    obs = tuple(obs)
     if gossip_impl == "auto":
         from . import algorithms as alg  # deferred: algorithms imports driver
         if plan is None:
@@ -197,12 +220,14 @@ def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
                        static_t=(pstep.dispatch == "static"))
 
         def core(state, sub, tensors, t):
-            return pstep(state, grad_fn, tensors, t, sub), None
+            out = pstep(state, grad_fn, tensors, t, sub, obs=obs)
+            return (out[0], {"obs": out[1]}) if obs else (out, None)
     else:
         staged = stage(weight_schedule, wps=wps, total=total)
 
         def core(state, sub, weights, t):
-            return algo.step(state, grad_fn, weights, sub), None
+            out = algo.step(state, grad_fn, weights, sub, obs=obs)
+            return (out[0], {"obs": out[1]}) if obs else (out, None)
 
     step = bind_step(staged, core)
 
@@ -218,8 +243,12 @@ def run_algorithm(algo, x0: PyTree, grad_fn, weight_schedule, num_steps: int,
             return None
         if k % eval_every == 0 or k == num_steps - 1:
             xbar = jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
-            return (t, jax.device_get(eval_fn(xbar)))
+            val = jax.device_get(eval_fn(xbar))
+            if telemetry is not None and hasattr(telemetry, "eval_event"):
+                telemetry.eval_event(k, t, val)
+            return (t, val)
         return None
 
     return run_loop(step, state, steps=num_steps, wps=wps,
-                    period=staged.period, extra_fn=extra_fn, record=record)
+                    period=staged.period, extra_fn=extra_fn, record=record,
+                    tracer=tracer)

@@ -76,6 +76,67 @@ def _tracker_delta(h: PyTree, g: PyTree, g_prev: PyTree) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# In-step observability scalars (repro.obs) — computed on device as part of
+# the step's output pytree, so measuring a run adds no host syncs.
+# ---------------------------------------------------------------------------
+
+# The in-jit metric vocabulary.  Descriptions live in repro.obs.metrics;
+# the computation lives HERE (once, for both runtimes).
+OBS_METRICS = ("grad_norm", "consensus", "mix_residual", "tracker_residual")
+
+
+def default_obs(rule: "UpdateRule") -> tuple:
+    """The rule-appropriate metric set: every rule has a gradient, an
+    iterate and a mix; only tracking rules carry a tracker."""
+    if rule.kind == "tracking":
+        return OBS_METRICS
+    return tuple(m for m in OBS_METRICS if m != "tracker_residual")
+
+
+def _fro(tree: PyTree) -> jax.Array:
+    """Frobenius norm over every leaf, accumulated in f32."""
+    tot = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree))
+    return jnp.sqrt(tot)
+
+
+def _obs_scalars(names, *, g: PyTree, x: PyTree, pre_mix: PyTree,
+                 post_mix: PyTree, h: Optional[PyTree] = None) -> dict:
+    """The requested in-step scalars, all f32 device scalars:
+
+    ``grad_norm``         ||g||_F of this step's stacked oracle sample;
+    ``consensus``         ||x − x̄||_F of the post-update iterate;
+    ``mix_residual``      ||Mix(z) − z||_F of the step's gossip window —
+                          how far mixing actually moved the state (0 on
+                          empty/identity rounds);
+    ``tracker_residual``  ||mean(h) − mean(g)||_F — drift of the gradient-
+                          tracking invariant h̄ = ḡ (grows under clipping,
+                          bf16 trackers, or non-doubly-stochastic repair);
+                          0 for rules without a tracker.
+    """
+    out = {}
+    for name in names:
+        if name == "grad_norm":
+            out[name] = _fro(g)
+        elif name == "consensus":
+            out[name] = _fro(jax.tree.map(
+                lambda l: l - jnp.mean(l, axis=0, keepdims=True), x))
+        elif name == "mix_residual":
+            out[name] = _fro(jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                post_mix, pre_mix))
+        elif name == "tracker_residual":
+            out[name] = (jnp.zeros((), jnp.float32) if h is None else _fro(
+                jax.tree.map(
+                    lambda hh, gg: jnp.mean(hh.astype(jnp.float32), axis=0)
+                    - jnp.mean(gg.astype(jnp.float32), axis=0), h, g)))
+        else:
+            raise ValueError(f"unknown obs metric {name!r} "
+                             f"(have {OBS_METRICS})")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Engine interfaces
 # ---------------------------------------------------------------------------
 
@@ -203,23 +264,53 @@ ALGORITHMS = ("dsgd", "local_sgd", "dsgt", "mc_dsgt", "gt_local", "d2")
 # The generic step / warm start (interprets the spec — no per-name branches)
 # ---------------------------------------------------------------------------
 
-def step(rule: UpdateRule, state: EngineState,
-         ops: EngineOps) -> Tuple[EngineState, Any]:
-    """One round of ``rule``: returns (new state, runtime metrics)."""
+def _annotate(ops: EngineOps) -> EngineOps:
+    """Wrap the runtime's grad/mix in :func:`jax.named_scope` so profiler
+    traces (``repro.obs.trace`` ``--profile-dir``) decompose a fused step
+    into its grad vs mix phases.  Pure metadata — no runtime cost."""
+    def mix(off, r, tree):
+        with jax.named_scope("obs_mix"):
+            return ops.mix(off, r, tree)
+
+    def grad(x):
+        with jax.named_scope("obs_grad"):
+            return ops.grad(x)
+
+    return ops._replace(mix=mix, grad=grad)
+
+
+def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
+         obs: tuple = ()) -> Tuple[EngineState, Any]:
+    """One round of ``rule``: returns (new state, runtime metrics).
+
+    ``obs`` names in-step observability scalars (:data:`OBS_METRICS`) to
+    compute on device alongside the update; when non-empty the second
+    return value becomes ``(runtime_metrics, obs_dict)``.  Because the
+    scalars ride the step's output pytree, enabling them adds device FLOPs
+    only — no extra host round trips on the hot path."""
     gamma, R = rule.gamma, rule.R
+    ops = _annotate(ops)
+
+    def out(metrics, *, g, x, pre_mix, post_mix, h=None):
+        if not obs:
+            return metrics
+        return metrics, _obs_scalars(obs, g=g, x=x, pre_mix=pre_mix,
+                                     post_mix=post_mix, h=h)
 
     if rule.kind == "sgd":
         if rule.mix_before_update:
-            x = ops.mix(0, rule.weights_per_step, state.x)
-            metrics, g = ops.grad(x)
+            xm = ops.mix(0, rule.weights_per_step, state.x)
+            metrics, g = ops.grad(xm)
             upd, opt = ops.local_update(g, state.opt)
-            x = _axpy(-gamma, upd, x)
+            x = _axpy(-gamma, upd, xm)
+            aux = out(metrics, g=g, x=x, pre_mix=state.x, post_mix=xm)
         else:
             metrics, g = ops.grad(state.x)
             upd, opt = ops.local_update(g, state.opt)
-            x = ops.mix(0, rule.weights_per_step,
-                        _axpy(-gamma, upd, state.x))
-        return state._replace(x=x, opt=opt, k=state.k + 1), metrics
+            z = _axpy(-gamma, upd, state.x)
+            x = ops.mix(0, rule.weights_per_step, z)
+            aux = out(metrics, g=g, x=x, pre_mix=z, post_mix=x)
+        return state._replace(x=x, opt=opt, k=state.k + 1), aux
 
     if rule.kind == "difference":
         if state.g_prev is None:
@@ -230,26 +321,32 @@ def step(rule: UpdateRule, state: EngineState,
             - gamma * (gk - gp.astype(gk.dtype)),
             state.x, state.h, g, state.g_prev)
         x = ops.mix(0, 1, z)
+        aux = out(metrics, g=g, x=x, pre_mix=z, post_mix=x)
         # x^{k-1} rides in the h slot, uncast to keep the difference exact
         return EngineState(x=x, h=state.x, g_prev=ops.cast_aux(g),
-                           opt=state.opt, k=state.k + 1), metrics
+                           opt=state.opt, k=state.k + 1), aux
 
     # tracking
     if state.h is None:
         raise ValueError("call warm_start first (h requires g at x0)")
     d, opt = ops.local_update(state.h, state.opt)
     if rule.mix_before_update:
-        x = _axpy(-gamma, d, ops.mix(0, R, state.x))
+        xm = ops.mix(0, R, state.x)
+        x = _axpy(-gamma, d, xm)
+        pre, post = state.x, xm
     else:
-        x = ops.mix(0, R, _axpy(-gamma, d, state.x))
+        z = _axpy(-gamma, d, state.x)
+        x = ops.mix(0, R, z)
+        pre, post = z, x
     metrics, g = ops.grad(x)
     h_off = 0 if rule.shared_round else R
     if rule.correction_in_mix:
         h = ops.mix(h_off, R, _tracker_delta(state.h, g, state.g_prev))
     else:
         h = _tracker_delta(ops.mix(h_off, R, state.h), g, state.g_prev)
+    aux = out(metrics, g=g, x=x, pre_mix=pre, post_mix=post, h=h)
     return EngineState(x=x, h=ops.cast_aux(h), g_prev=ops.cast_aux(g),
-                       opt=opt, k=state.k + 1), metrics
+                       opt=opt, k=state.k + 1), aux
 
 
 def warm_start(rule: UpdateRule, state: EngineState,

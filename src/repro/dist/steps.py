@@ -67,7 +67,7 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
                     clip: Optional[float] = 1.0, unroll: bool = False,
                     pallas_block_d: int = 1024, pallas_interpret: bool = True,
                     plan=None, mesh=None, gossip_axis: str = "data",
-                    auto_dense: str = "einsum"):
+                    auto_dense: str = "einsum", obs: tuple = ()):
     """Build (init_state, warm_start, step) for one decentralized algorithm.
 
     gossip_impl: 'dense' (einsum multi-consensus), 'sun' (structured
@@ -86,6 +86,11 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
     ``mesh``/``gossip_axis`` enable the explicit ppermute matching lowering;
     ``auto_dense='pallas'`` routes runs of dense rounds through the fused
     Pallas kernel instead of the einsum scan.
+
+    ``obs`` names in-jit observability scalars (repro.obs /
+    :data:`repro.core.engine.OBS_METRICS`): when non-empty the step's
+    output dict gains an ``"obs"`` entry of device scalars, computed by
+    the shared engine — no extra host syncs.
     """
     rule = engine.make_rule(algo, gamma=gamma,
                             R=(1 if algo == "d2" else R))
@@ -192,8 +197,12 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
         return _to_train(engine.warm_start(rule, _to_engine(state), ops))
 
     def core(state: TrainState, batch, gossip, t):
-        es, loss = engine.step(rule, _to_engine(state), _ops(batch, gossip, t))
-        return _to_train(es), {"loss": loss}
+        es, aux = engine.step(rule, _to_engine(state),
+                              _ops(batch, gossip, t), obs=obs)
+        if obs:
+            loss, scalars = aux
+            return _to_train(es), {"loss": loss, "obs": scalars}
+        return _to_train(es), {"loss": aux}
     if gossip_impl == "auto":
         step = core
         step.gossip_dispatch = _plan_mix.dispatch

@@ -34,12 +34,21 @@ from .registry import (  # noqa: F401
     make_weight_schedule,
     register_topology,
 )
+from .registry import (  # noqa: F401
+    OBS_BOUNDS,
+    OBS_METRICS,
+    SINKS,
+    build_sink,
+    channel_label,
+    resolve_obs_names,
+)
 from .spec import (  # noqa: F401
     AlgorithmSpec,
     ChannelSpec,
     DataSpec,
     ExperimentSpec,
     ModelRef,
+    ObsSpec,
     RunSpec,
     TopologySpec,
     from_dict,

@@ -29,9 +29,11 @@ import jax.numpy as jnp
 
 from .. import configs
 from ..checkpoint import load_checkpoint, save_checkpoint
-from ..core import algorithms as alg, driver, engine
+from ..core import algorithms as alg, driver, engine, gossip
 from ..data import (logreg_dataset, logreg_dataset_dirichlet,
                     logreg_loss_and_grad, token_stream_for)
+from ..obs import console as obs_console, metrics as obs_metrics, \
+    optimality as obs_optimality, trace as obs_trace
 from ..sim import faults as sim_faults, telemetry as sim_telemetry
 from . import manifest as mf, registry
 from .spec import ExperimentSpec
@@ -74,12 +76,15 @@ class Built:
     grad_fn: Any = None
     eval_fn: Any = None
     x0: Any = None
+    obs: Optional[obs_metrics.ObsRecorder] = None
+    obs_names: tuple = ()
+    tracer: Optional[obs_trace.Tracer] = None
 
     @property
     def realized(self) -> dict:
         """The manifest's ``realized`` section: quantities a reader cannot
         derive from the spec alone."""
-        return {
+        out = {
             "period": int(self.schedule.period),
             "weights_per_step": int(self.wps),
             "horizon": int(self.horizon),
@@ -87,6 +92,10 @@ class Built:
             "plan_kinds": (None if self.plan is None
                            else sorted(set(self.plan.kinds))),
         }
+        if self.spec.obs.metrics:
+            out["event_log"] = self.spec.obs.metrics
+            out["obs_names"] = list(self.obs_names)
+        return out
 
 
 def weights_per_step(algorithm) -> int:
@@ -125,6 +134,16 @@ def _validate(spec: ExperimentSpec) -> None:
         if r.checkpoint or r.restore:
             raise ValueError("model.kind='logreg' does not support "
                              "checkpoint/restore (use the 'arch' runtime)")
+    o = spec.obs
+    if o.sink not in registry.SINKS:
+        raise ValueError(f"obs.sink={o.sink!r}: unknown "
+                         f"(have {sorted(registry.SINKS)})")
+    if o.bound not in registry.OBS_BOUNDS:
+        raise ValueError(f"obs.bound={o.bound!r}: unknown "
+                         f"(have {sorted(registry.OBS_BOUNDS)})")
+    if o.every < 1:
+        raise ValueError(f"obs.every={o.every}: must be >= 1")
+    registry.resolve_obs_names(o.names)  # raises on unknown metric names
 
 
 def build(spec: ExperimentSpec) -> Built:
@@ -163,6 +182,8 @@ def build(spec: ExperimentSpec) -> Built:
                   schedule=sched, plan=plan, fault_models=fault_models,
                   local_opt=registry.build_local_opt(al.local_opt),
                   telemetry=telem)
+    if spec.obs.enabled:
+        _build_obs(built)
 
     if spec.model.kind == "arch":
         from ..models import build as build_model
@@ -191,6 +212,53 @@ def build(spec: ExperimentSpec) -> Built:
     return built
 
 
+def _effective_beta(sched, period: int, cap: int = 64) -> float:
+    """Measured per-round mixing parameter of the realized schedule: the
+    window contraction over (up to ``cap`` rounds of) one period, taken to
+    the per-round geometric mean — what the lower-bound floor's network
+    term should be evaluated at."""
+    rounds = max(1, min(int(period), cap))
+    c = gossip.consensus_contraction(sched, rounds)
+    c = min(max(float(c), 0.0), 1.0 - 1e-9)
+    return c ** (1.0 / rounds)
+
+
+def _build_obs(built: Built) -> None:
+    """Attach the repro.obs bundle to a Built: the event sink, the phase
+    tracer, the optimality-gap tracker for this spec's cell, the optional
+    profiler, and the :class:`~repro.obs.metrics.ObsRecorder` tying them
+    together (chaining the existing TelemetryRecorder when the scenario
+    has one, instead of replacing it)."""
+    spec = built.spec
+    rs, al, o = spec.run, spec.algorithm, spec.obs
+    built.obs_names = registry.resolve_obs_names(o.names, built.rule)
+    built.tracer = obs_trace.Tracer(annotate=bool(o.profile_dir))
+    cell = obs_optimality.cell_key(al.name, spec.topology.kind,
+                                   registry.channel_label(spec.channel))
+    gap = obs_optimality.GapTracker(
+        cell=cell, n=rs.nodes,
+        beta=_effective_beta(built.schedule, built.schedule.period),
+        bound=o.bound)
+    profiler = (obs_trace.Profiler(o.profile_dir, o.profile_steps)
+                if o.profile_dir else None)
+    from .spec import spec_hash
+    meta = {"name": f"{al.name} on {spec.topology.kind}",
+            "spec_hash": spec_hash(spec), "cell": cell,
+            "algo": al.name, "topology": spec.topology.kind,
+            "channel": registry.channel_label(spec.channel),
+            "model": spec.model.kind, "n": rs.nodes, "steps": rs.steps,
+            "weights_per_step": built.wps,
+            "gossip_impl": rs.gossip_impl, "every": o.every,
+            "obs_names": list(built.obs_names)}
+    # profile-only runs (profile_dir set, no metrics path) still need a
+    # sink for the recorder's meta/summary events — an in-memory one
+    sink = (obs_metrics.MemorySink() if o.sink == "jsonl" and not o.metrics
+            else registry.build_sink(o))
+    built.obs = obs_metrics.ObsRecorder(
+        sink, every=o.every, telemetry=built.telemetry,
+        tracer=built.tracer, gap=gap, profiler=profiler, meta=meta)
+
+
 # ---------------------------------------------------------------------------
 # run(spec): the one entry
 # ---------------------------------------------------------------------------
@@ -198,16 +266,24 @@ def build(spec: ExperimentSpec) -> Built:
 def run(spec: ExperimentSpec, *, quiet: bool = False) -> Result:
     """Build and execute ``spec`` end to end on its runtime, writing the
     reproducibility manifest next to every declared output (checkpoint,
-    telemetry).  The telemetry manifest is written up front; the checkpoint
-    manifest is written only AFTER the restore check, so resuming in place
-    (checkpoint == restore) still compares against the ORIGINAL run's
-    manifest before overwriting it."""
+    telemetry, event log).  The telemetry/event-log manifests are written
+    up front; the checkpoint manifest is written only AFTER the restore
+    check, so resuming in place (checkpoint == restore) still compares
+    against the ORIGINAL run's manifest before overwriting it."""
     built = build(spec)
     if spec.run.telemetry:
         mf.write_manifest(spec.run.telemetry, spec, realized=built.realized)
-    if spec.model.kind == "arch":
-        return _run_arch(built, quiet=quiet)
-    return _run_logreg(built)
+    if spec.obs.metrics:
+        mf.write_manifest(spec.obs.metrics, spec, realized=built.realized)
+    if built.obs is not None and built.obs.profiler is not None:
+        built.obs.profiler.start()
+    try:
+        if spec.model.kind == "arch":
+            return _run_arch(built, quiet=quiet)
+        return _run_logreg(built)
+    finally:
+        if built.obs is not None:
+            built.obs.close()
 
 
 def _run_logreg(built: Built) -> Result:
@@ -219,7 +295,9 @@ def _run_logreg(built: Built) -> Result:
         algo, built.x0, built.grad_fn, built.schedule, rs.steps,
         jax.random.key(rs.seed), eval_fn=built.eval_fn,
         eval_every=rs.eval_every, gossip_impl=rs.gossip_impl,
-        plan=built.plan, telemetry=built.telemetry)
+        plan=built.plan,
+        telemetry=(built.obs if built.obs is not None else built.telemetry),
+        obs=built.obs_names, tracer=built.tracer)
     if rs.telemetry and built.telemetry is not None:
         built.telemetry.dump(rs.telemetry)
     return Result(state=state, history=history, telemetry=built.telemetry,
@@ -234,19 +312,21 @@ def _run_arch(built: Built, *, quiet: bool = False) -> Result:
 
     spec, rs = built.spec, built.spec.run
     stream, telem = built.stream, built.telemetry
+    con = obs_console.Console(quiet=quiet)
     init_state, warm_start, train_step = dsteps.make_train_step(
         built.model, built.cfg, algo=spec.algorithm.name,
         gamma=spec.algorithm.gamma, R=built.rule.R,
         gossip_impl=rs.gossip_impl, plan=built.plan,
         local_opt=built.local_opt,
-        pallas_interpret=jax.default_backend() != "tpu")
+        pallas_interpret=jax.default_backend() != "tpu",
+        obs=built.obs_names)
 
     state = init_state(jax.random.key(rs.seed), rs.nodes, jnp.float32)
     state, start_step = driver.restore_or_warm(
         state, restore=rs.restore, load_fn=load_checkpoint,
         warm=lambda s: warm_start(s, stream.batch_at(0)), spec=spec)
-    if rs.restore and not quiet:
-        print(f"restored step {start_step} from {rs.restore}")
+    if rs.restore:
+        con.print(f"restored step {start_step} from {rs.restore}")
     if rs.checkpoint:
         # written after the restore check (resume-in-place must be compared
         # against the original manifest first) but before the loop, so even
@@ -268,10 +348,14 @@ def _run_arch(built: Built, *, quiet: bool = False) -> Result:
             staged, lambda state, batch, W, t: train_step(state, batch, W))
 
     def record(k, t, state, out, dt):
-        loss = float(out["loss"])
-        tl = telem.record(k, t, state, out, dt) if telem is not None else None
+        if built.obs is not None:
+            tl = built.obs.record(k, t, state, out, dt)
+        else:
+            tl = (telem.record(k, t, state, out, dt)
+                  if telem is not None else None)
         if k % rs.log_every != 0:
             return None
+        loss = float(out["loss"])
         ce = (tl["consensus"] if tl is not None
               else sim_telemetry.consensus_distance(state.x))
         extra = ""
@@ -280,8 +364,7 @@ def _run_arch(built: Built, *, quiet: bool = False) -> Result:
             gap = tl["spectral_gap"]
             extra = (f"  gap {gap if gap is not None else float('nan'):.3f}"
                      f"  eff_diam {ed if ed is not None else '-'}")
-        if not quiet:
-            print(f"step {k:5d}  T={t:6d}  loss {loss:.4f}  "
+        con.print(f"step {k:5d}  T={t:6d}  loss {loss:.4f}  "
                   f"consensus {ce:.3e}{extra}  {dt:.2f}s")
         return {"step": k, "loss": loss, "consensus": ce,
                 "sec": round(dt, 3)}
@@ -289,12 +372,12 @@ def _run_arch(built: Built, *, quiet: bool = False) -> Result:
     state, history = driver.run_loop(
         step_fn, state, steps=rs.steps, wps=built.wps, period=staged.period,
         start_step=start_step, extra_fn=lambda k: stream.batch_at(k + 1),
-        record=record, checkpoint=rs.checkpoint, save_fn=save_checkpoint)
-    if rs.checkpoint and not quiet:
-        print(f"saved {rs.checkpoint}")
+        record=record, checkpoint=rs.checkpoint, save_fn=save_checkpoint,
+        tracer=built.tracer)
+    if rs.checkpoint:
+        con.event("saved", path=rs.checkpoint)
     if rs.telemetry and telem is not None:
         telem.dump(rs.telemetry)
-        if not quiet:
-            print(f"wrote telemetry {rs.telemetry}")
+        con.event("wrote_telemetry", path=rs.telemetry)
     return Result(state=state, history=history, telemetry=telem, spec=spec,
                   built=built)

@@ -20,6 +20,10 @@ MANIFEST_FORMAT = "repro.exp/manifest/v1"
 _RESUMABLE_RUN_FIELDS = ("steps", "checkpoint", "restore", "telemetry",
                          "log_every", "eval_every")
 
+# Whole sections that are observation-only: they never change the training
+# trajectory, so a restore continuation may change them freely.
+_NON_SCENARIO_SECTIONS = ("obs",)
+
 
 def manifest_path(output_path: str) -> str:
     """The manifest sits next to its output: ``<output>.spec.json``."""
@@ -66,6 +70,8 @@ def _comparable(spec: S.ExperimentSpec) -> dict:
     d = S.to_dict(spec, elide_defaults=False)
     for f in _RESUMABLE_RUN_FIELDS:
         d["run"].pop(f, None)
+    for sec in _NON_SCENARIO_SECTIONS:
+        d.pop(sec, None)
     return d
 
 

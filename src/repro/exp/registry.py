@@ -15,6 +15,7 @@ import numpy as np
 
 from .. import optim
 from ..core import engine, gossip, topology as topo
+from ..obs import metrics as obs_metrics, optimality as obs_optimality
 from ..sim import channel as sim_channel, faults as sim_faults, \
     mobility as sim_mobility
 from .spec import ChannelSpec, TopologySpec
@@ -190,3 +191,46 @@ def build_local_opt(name: str):
                          f"(have {sorted(LOCAL_OPTS)})")
     factory = LOCAL_OPTS[name]
     return factory() if factory is not None else None
+
+
+# ---------------------------------------------------------------------------
+# Observability: metric names, sink backends, lower bounds
+# ---------------------------------------------------------------------------
+
+# The legal ``ObsSpec.names`` entries ARE the engine's in-jit metric
+# vocabulary (described host-side in repro.obs.metrics.OBS_METRICS).
+OBS_METRICS = obs_metrics.OBS_METRICS
+
+SINKS: Dict[str, Callable] = {
+    "jsonl": lambda path: obs_metrics.EventLog(path),
+    "memory": lambda path: obs_metrics.MemorySink(),
+}
+
+OBS_BOUNDS = obs_optimality.BOUNDS  # ObsSpec.bound vocabulary
+
+
+def build_sink(obs_spec) -> "obs_metrics.MetricsSink":
+    """Instantiate the event sink an :class:`repro.exp.spec.ObsSpec`
+    selects (``jsonl`` needs ``obs_spec.metrics`` as the path; ``memory``
+    ignores it)."""
+    if obs_spec.sink not in SINKS:
+        raise ValueError(f"unknown obs sink {obs_spec.sink!r} "
+                         f"(have {sorted(SINKS)})")
+    if obs_spec.sink == "jsonl" and not obs_spec.metrics:
+        raise ValueError("obs.sink='jsonl' requires obs.metrics "
+                         "(the event-log path)")
+    return SINKS[obs_spec.sink](obs_spec.metrics)
+
+
+def resolve_obs_names(names, rule=None) -> tuple:
+    """Normalize ``ObsSpec.names`` to the engine-ready metric tuple
+    (see :func:`repro.obs.metrics.resolve_names`)."""
+    return obs_metrics.resolve_names(names, rule)
+
+
+def channel_label(s: ChannelSpec) -> str:
+    """Short label of the active degradations ("ideal" for none) — the
+    channel leg of the optimality-gap cell key."""
+    active = [name for name in ("link_drop", "burst_loss", "churn",
+                                "straggler") if getattr(s, name) > 0]
+    return "+".join(active) if active else "ideal"

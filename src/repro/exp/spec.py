@@ -119,6 +119,33 @@ class RunSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Observability (:mod:`repro.obs`): in-jit step metrics into an event
+    log, phase tracing, and optimality-gap tracking.  Off by default —
+    enabled when ``metrics`` (the JSONL event-log path) or ``profile_dir``
+    is set.  ``names`` selects engine metrics (``'auto'`` = the update
+    rule's default set, or a comma-separated subset of
+    :data:`repro.obs.metrics.OBS_METRICS`); ``every`` is the host flush
+    batch (device scalars cross the host boundary once per ``every``
+    steps); ``sink`` is a :data:`repro.exp.registry.SINKS` key;
+    ``profile_dir``/``profile_steps`` dump a jax profiler trace of the
+    first N steps; ``bound`` names the lower-bound reference the gap is
+    measured against (:data:`repro.obs.optimality.BOUNDS`)."""
+
+    metrics: Optional[str] = None
+    every: int = 10
+    names: str = "auto"
+    sink: str = "jsonl"
+    bound: str = "paper"
+    profile_dir: Optional[str] = None
+    profile_steps: int = 8
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.metrics or self.profile_dir)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """One experiment = one point of the scenario grid.  The default value
     of every field matches the historical ``launch/train.py`` flag default,
@@ -130,11 +157,12 @@ class ExperimentSpec:
     topology: TopologySpec = TopologySpec()
     channel: ChannelSpec = ChannelSpec()
     run: RunSpec = RunSpec()
+    obs: ObsSpec = ObsSpec()
 
 
 _SECTION_TYPES = {"model": ModelRef, "data": DataSpec,
                   "algorithm": AlgorithmSpec, "topology": TopologySpec,
-                  "channel": ChannelSpec, "run": RunSpec}
+                  "channel": ChannelSpec, "run": RunSpec, "obs": ObsSpec}
 
 
 # ---------------------------------------------------------------------------

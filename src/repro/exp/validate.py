@@ -4,12 +4,15 @@ and that every checked-in manifest still parses (schema drift fails fast).
     PYTHONPATH=src python -m repro.exp.validate [--examples DIR]
         [--manifests GLOB] [--steps N]
 
-Two passes:
+Three passes:
 
 1. every ``SPECS`` entry exported by the example scripts is rebuilt with a
-   tiny run shape (``--steps``, no checkpoint/telemetry I/O) and executed
-   end to end through :func:`repro.exp.run`;
-2. every manifest matching ``--manifests`` (the checked-in scenario
+   tiny run shape (``--steps``, no checkpoint/telemetry/obs I/O) and
+   executed end to end through :func:`repro.exp.run`;
+2. the observability path (:mod:`repro.obs`) is smoked: a tiny
+   ObsSpec-enabled run must produce a parseable JSONL event log covering
+   every step, a manifest that round-trips, and a report.py render;
+3. every manifest matching ``--manifests`` (the checked-in scenario
    manifests under ``experiments/manifests/`` by default) is round-tripped
    through the strict ``from_dict``/``to_dict`` pair, and the run fails if
    fewer than ``--min-manifests`` matched (a vacuous glob is a failure,
@@ -45,9 +48,54 @@ def iter_example_specs(examples_dir: str):
 
 def shrink(spec: S.ExperimentSpec, steps: int) -> S.ExperimentSpec:
     """A smoke-sized copy of ``spec``: ``steps`` steps, no output files."""
-    return dataclasses.replace(spec, run=dataclasses.replace(
-        spec.run, steps=steps, eval_every=1, checkpoint=None, restore=None,
-        telemetry=None))
+    return dataclasses.replace(
+        spec,
+        run=dataclasses.replace(
+            spec.run, steps=steps, eval_every=1, checkpoint=None,
+            restore=None, telemetry=None),
+        obs=S.ObsSpec())
+
+
+def validate_obs(steps: int) -> list[str]:
+    """Smoke the metrics path end to end: run a tiny ObsSpec-enabled spec,
+    then assert the JSONL event log parses, covers every step, carries a
+    summary, round-trips its manifest, and renders through report.py."""
+    import json
+    import tempfile
+
+    from ..obs import report as obs_report
+    from .build import run as _run
+
+    failures = []
+    with tempfile.TemporaryDirectory() as tmp:
+        log = os.path.join(tmp, "obs.jsonl")
+        spec = S.from_dict({
+            "model": {"kind": "logreg", "d": 8, "m": 32},
+            "algorithm": {"name": "mc_dsgt", "R": 2},
+            "run": {"steps": steps + 2, "nodes": 4},
+            "obs": {"metrics": log, "every": 2},
+        })
+        try:
+            _run(spec, quiet=True)
+            events = [json.loads(line) for line in open(log)]
+            kinds = [e["event"] for e in events]
+            n_steps = kinds.count("step")
+            assert kinds[0] == "meta", f"first event {kinds[0]!r}, not meta"
+            assert n_steps == spec.run.steps, \
+                f"{n_steps} step events for {spec.run.steps} steps " \
+                "(flush batching lost events)"
+            assert kinds[-1] == "summary", "no trailing summary event"
+            assert events[-1]["optimality"]["gap_ratio"] is not None
+            m = mf.load_manifest(mf.manifest_path(log))
+            assert m["spec_parsed"] == spec
+            text = obs_report.render(events)
+            assert "optimality gap" in text and "grad_norm" in text
+            print(f"ok   obs:metrics-path  [{S.spec_hash(spec)}]  "
+                  f"events={len(events)}")
+        except Exception as e:  # noqa: BLE001 - collect, don't crash
+            failures.append(f"obs:metrics-path: {type(e).__name__}: {e}")
+            print(f"FAIL obs:metrics-path: {e}")
+    return failures
 
 
 def validate_manifests(pattern: str) -> list[str]:
@@ -101,6 +149,9 @@ def main(argv=None) -> int:
             failures.append(f"{tag}: {type(e).__name__}: {e}")
             print(f"FAIL {tag}: {e}")
     print(f"{n_specs} example spec(s) smoked")
+
+    if not args.only:
+        failures += validate_obs(args.steps)
 
     mfails = validate_manifests(args.manifests)
     n_manifests = len(glob.glob(args.manifests))

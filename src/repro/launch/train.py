@@ -27,6 +27,11 @@ The paper's federated scenario (one rule, zero runtime edits):
 The wireless scenario (repro.sim): moving nodes, lossy channel, telemetry:
     PYTHONPATH=src python -m repro.launch.train --topology geometric-mobility \
         --nodes 16 --link-drop 0.2 --gossip-impl auto --telemetry telem.json
+
+Observability (repro.obs): JSONL event log + phase spans + optimality gap,
+rendered with ``python -m repro.obs.report run.jsonl``:
+    PYTHONPATH=src python -m repro.launch.train --steps 40 --algo mc_dsgt \
+        --metrics run.jsonl --metrics-every 10 --obs-names auto
 """
 
 from __future__ import annotations
@@ -68,6 +73,11 @@ FLAG_TO_FIELD = {
     "log_every": "run.log_every",
     "active_vocab": "data.active_vocab",
     "seed": "run.seed",
+    "metrics": "obs.metrics",
+    "metrics_every": "obs.every",
+    "obs_names": "obs.names",
+    "profile_dir": "obs.profile_dir",
+    "profile_steps": "obs.profile_steps",
 }
 
 
@@ -140,6 +150,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="restrict synthetic tokens to first k ids "
                          "(learnable stream); 0 = full vocab")
     ap.add_argument("--seed", type=int)
+    ap.add_argument("--metrics", metavar="PATH",
+                    help="write the repro.obs JSONL event log (in-jit step "
+                         "metrics, phase spans, optimality gap) to PATH; "
+                         "render it with `python -m repro.obs.report PATH`")
+    ap.add_argument("--metrics-every", type=int,
+                    help="host flush batch for --metrics: buffered device "
+                         "scalars cross the host boundary once per N "
+                         "recorded steps (default 10)")
+    ap.add_argument("--obs-names",
+                    help="comma-separated in-jit metric subset for "
+                         f"--metrics (of: {', '.join(exp.OBS_METRICS)}); "
+                         "'auto' = the update rule's default set")
+    ap.add_argument("--profile-dir", metavar="DIR",
+                    help="dump a jax profiler trace of the first "
+                         "--profile-steps steps into DIR")
+    ap.add_argument("--profile-steps", type=int)
+    ap.add_argument("--quiet", action="store_true", default=False,
+                    help="suppress progress output (event-log/telemetry "
+                         "files are still written)")
     return ap
 
 
@@ -161,7 +190,7 @@ def main(argv=None):
     if getattr(args, "dump_config", False):
         print(exp.to_json(spec, elide_defaults=False))
         return spec
-    return exp.run(spec).history
+    return exp.run(spec, quiet=args.quiet).history
 
 
 if __name__ == "__main__":

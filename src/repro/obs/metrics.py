@@ -1,0 +1,353 @@
+"""Metric sinks and the batched in-jit-metrics recorder.
+
+The actual metric arithmetic lives in :mod:`repro.core.engine`
+(:data:`~repro.core.engine.OBS_METRICS` — grad norm, consensus distance,
+mixing residual, tracker residual), computed INSIDE the jitted step of
+both runtimes as a dict of device scalars.  This module is the host side:
+a :class:`MetricsSink` protocol with the JSONL :class:`EventLog` backend,
+and the :class:`ObsRecorder` that plugs into the driver's ``record`` hook,
+buffers the device scalars, and hands each ``every``-step batch to a
+background flusher thread that crosses the host boundary with a single
+batched ``jax.device_get`` — the hot path never gains a per-step sync or
+transfer.
+
+Event-log schema (one JSON object per line)::
+
+    {"event": "meta", ...}      run header (spec hash, algo, n, cell, ...)
+    {"event": "step", ...}      per-step metrics (see EVENT_FIELDS)
+    {"event": "eval", ...}      eval_fn points (k, t, value)
+    {"event": "summary", ...}   end-of-run phase totals + optimality gap
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Iterable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..core import engine
+
+# Host-facing vocabulary: one description per engine metric.  Kept in lock
+# step with the engine (test-enforced) so registries can validate names.
+OBS_METRICS = {
+    "grad_norm": "||g||_F of the stacked per-node oracle gradients "
+                 "(f32 accumulation)",
+    "consensus": "consensus distance ||x - x_bar||_F of the post-step "
+                 "stacked iterate",
+    "mix_residual": "||x_post - x_pre||_F across the step's gossip "
+                    "mixing (0 when the realized window did not move "
+                    "the state)",
+    "tracker_residual": "||mean_i h_i - mean_i g_i||_F — drift of the "
+                        "gradient-tracking invariant mean(h) = mean(g) "
+                        "(clipping / low-precision trackers / channel "
+                        "repair make this nonzero)",
+}
+assert tuple(OBS_METRICS) == engine.OBS_METRICS
+
+EVENT_FIELDS = {
+    "event": "record type: meta | step | eval | summary",
+    "step": "driver step index k",
+    "t": "total gossip/oracle budget T consumed after this step",
+    "sec": "wall-clock seconds of the step dispatch",
+    "loss": "runtime scalar loss when the step reports one",
+    **OBS_METRICS,
+    "phases": "wall-clock seconds per driver phase since the previous "
+              "record (data/step/telemetry/checkpoint)",
+    "spectral_gap": "realized-window mixing contraction (from the chained "
+                    "TelemetryRecorder, when present)",
+    "eff_diameter": "realized-window effective diameter (chained "
+                    "TelemetryRecorder)",
+    "kinds": "realized plan-kind counts (chained TelemetryRecorder)",
+    "value": "eval_fn(x_bar) at an eval event",
+}
+
+# Keys the chained TelemetryRecorder contributes to a step event (its
+# step/t/loss/sec/consensus duplicates the recorder's own fields).
+_TELEMETRY_KEYS = ("window", "spectral_gap", "eff_diameter", "kinds")
+
+
+@runtime_checkable
+class MetricsSink(Protocol):
+    """Anything that accepts event dicts: ``emit(event)`` + ``close()``."""
+
+    def emit(self, event: dict) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class EventLog:
+    """Append-only JSONL sink.  Opens lazily (and mkdir -p's the parent)
+    on the first emit, so constructing a spec never touches the fs."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = None
+
+    def emit(self, event: dict) -> None:
+        if self._f is None:
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._f = open(self.path, "w")
+        self._f.write(json.dumps(event, default=_jsonable) + "\n")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+class MemorySink:
+    """In-process sink (tests, notebooks): events land in ``.events``."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+        self.closed = False
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+
+    def close(self) -> None:
+        self.closed = True
+
+
+class ChainSink:
+    """Fan one emit out to several sinks."""
+
+    def __init__(self, *sinks: MetricsSink):
+        self.sinks = tuple(s for s in sinks if s is not None)
+
+    def emit(self, event: dict) -> None:
+        for s in self.sinks:
+            s.emit(event)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+
+# Jitted scalar packing for the flush transfer; retraces only when the
+# batch size changes (the tail flush), so steady state is one cached call.
+@jax.jit
+def _pack(leaves):
+    return jnp.stack([jnp.asarray(v, jnp.float32) for v in leaves])
+
+
+def _jsonable(v):
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return str(v)
+
+
+def read_events(path: str, kind: Optional[str] = None) -> list[dict]:
+    """Load a JSONL event log (optionally filtered to one event kind)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            ev = json.loads(line)
+            if kind is None or ev.get("event") == kind:
+                out.append(ev)
+    return out
+
+
+class ObsRecorder:
+    """The driver ``record`` hook that turns in-jit obs scalars into events.
+
+    Plugs in wherever a :class:`repro.sim.telemetry.TelemetryRecorder`
+    does (``record(k, t, state, out, dt)``); an existing TelemetryRecorder
+    chains *through* it (``telemetry=``) rather than being replaced — its
+    windowed mixing fields ride along on the step events and its own
+    ``history``/``dump`` keep working.
+
+    Per step this only appends to a host-side buffer; every ``every``
+    recorded steps the buffered batch is handed to a background flusher
+    thread, which moves the device scalars host-side in ONE batched
+    ``jax.device_get`` (the buffered arrays are steps behind the dispatch
+    frontier, so the copy does not stall the step pipeline) and feeds the
+    sink / gap tracker off the hot path.  ``close()`` flushes the tail,
+    joins the flusher, and emits the run ``summary`` event, so
+    ``every > 1`` never loses events.  ``background=False`` flushes
+    synchronously (deterministic interleaving for debugging).
+    """
+
+    def __init__(self, sink: MetricsSink, *, every: int = 10,
+                 telemetry=None, tracer=None, gap=None, profiler=None,
+                 meta: Optional[dict] = None, background: bool = True):
+        self.sink = sink
+        self.every = max(1, int(every))
+        self.telemetry = telemetry
+        self.tracer = tracer
+        self.gap = gap
+        self.profiler = profiler
+        self.background = background
+        self._buf: list[tuple] = []  # raw entries; see hook comment below
+        self._closed = False
+        self._queue: Optional[queue.SimpleQueue] = None
+        self._worker: Optional[threading.Thread] = None
+        self._worker_err: Optional[BaseException] = None
+        if meta is not None:
+            self.sink.emit({"event": "meta", **meta})
+
+    # -- driver hooks -----------------------------------------------------
+    #
+    # The hot path appends raw tuples; the event dicts are built at drain
+    # time (in the flusher thread under ``background=True``):
+    #   ("step", k, t, dt, tl, phases, device)   device = {loss?, obs?}
+    #   ("eval", k, t, value)
+
+    def record(self, k: int, t: int, state: Any, out: Any,
+               dt: float) -> Optional[dict]:
+        tl = None
+        if self.telemetry is not None:
+            tl = self.telemetry.record(k, t, state, out, dt)
+        phases = self.tracer.drain() if self.tracer is not None else None
+        device = None
+        if type(out) is dict:
+            device = {kk: out[kk] for kk in ("loss", "obs") if kk in out
+                      and out[kk] is not None}
+        self._buf.append(("step", k, t, dt, tl, phases, device))
+        if self.profiler is not None:
+            self.profiler.maybe_stop(k)
+        if len(self._buf) >= self.every:
+            self.flush()
+        return tl
+
+    def eval_event(self, k: int, t: int, value) -> None:
+        """An eval_fn point (already host-side in the driver)."""
+        self._buf.append(("eval", k, t, float(value)))
+        if len(self._buf) >= self.every:
+            self.flush()
+
+    # -- flushing ---------------------------------------------------------
+
+    def flush(self) -> None:
+        if not self._buf:
+            return
+        buf, self._buf = self._buf, []
+        if self.background:
+            if self._worker_err is not None:
+                err, self._worker_err = self._worker_err, None
+                raise err
+            if self._worker is None:
+                self._queue = queue.SimpleQueue()
+                self._worker = threading.Thread(
+                    target=self._drain_loop, name="obs-flush", daemon=True)
+                self._worker.start()
+            self._queue.put(buf)
+        else:
+            self._drain_batch(buf)
+
+    def _drain_loop(self) -> None:
+        while True:
+            batch = self._queue.get()
+            if batch is None:
+                return
+            try:
+                self._drain_batch(batch)
+            except BaseException as e:  # surfaced on the next flush/close
+                self._worker_err = e
+
+    def _drain_batch(self, buf) -> None:
+        # One host transfer for the whole batch: stack every buffered
+        # device scalar into a single array (one jitted call — op-by-op
+        # jnp.stack would dispatch per element) when the dtypes allow it;
+        # 50 tiny per-leaf copies cost ~10x one (50,) copy.
+        devs = [e[6] for e in buf if e[0] == "step" and e[6] is not None]
+        leaves, treedef = jax.tree.flatten(devs)
+        try:
+            flat = jax.device_get(_pack(leaves)) if leaves else []
+        except (TypeError, ValueError):  # mixed dtypes/shapes: per-leaf
+            flat = jax.device_get(leaves)
+        host_iter = iter(jax.tree.unflatten(
+            treedef, [float(v) for v in flat]))
+        for entry in buf:
+            if entry[0] == "eval":
+                _, k, t, value = entry
+                base = {"event": "eval", "step": int(k), "t": int(t),
+                        "value": value}
+            else:
+                _, k, t, dt, tl, phases, device = entry
+                base = {"event": "step", "step": int(k), "t": int(t),
+                        "sec": round(float(dt), 6)}
+                if tl:
+                    base.update({kk: tl[kk] for kk in _TELEMETRY_KEYS
+                                 if kk in tl})
+                if phases:
+                    base["phases"] = {p: round(v, 6)
+                                      for p, v in phases.items()}
+                if device is not None:
+                    got = next(host_iter)
+                    if "loss" in got:
+                        base["loss"] = float(got["loss"])
+                    for name, val in got.get("obs", {}).items():
+                        base[name] = float(val)
+                if self.gap is not None and "grad_norm" in base:
+                    self.gap.update(base["t"], base["grad_norm"] ** 2)
+            self.sink.emit(base)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.flush()
+        if self._worker is not None:
+            self._queue.put(None)
+            self._worker.join()
+            self._worker = None
+            if self._worker_err is not None:
+                raise self._worker_err
+        summary: dict = {"event": "summary"}
+        if self.tracer is not None:
+            summary["phases"] = self.tracer.summary()
+        if self.gap is not None:
+            summary["optimality"] = self.gap.summary()
+        self.sink.emit(summary)
+        if self.profiler is not None:
+            self.profiler.close()
+        self.sink.close()
+
+    # -- conveniences -----------------------------------------------------
+
+    def emit(self, event: dict) -> None:
+        """Pass-through for out-of-band events (meta, console mirrors)."""
+        self.sink.emit(event)
+
+    @property
+    def history(self) -> list:
+        """The chained TelemetryRecorder's history (empty when none)."""
+        return self.telemetry.history if self.telemetry is not None else []
+
+    def dump(self, path: str) -> None:
+        if self.telemetry is not None:
+            self.telemetry.dump(path)
+
+
+def resolve_names(names, rule=None) -> tuple:
+    """Normalize an obs metric selection to an engine-ready tuple.
+
+    ``names`` is ``'auto'`` (the rule's default set — tracker residual only
+    for tracking rules), a comma-separated string, an iterable of names, or
+    None/'' (no metrics).  Unknown names raise with the vocabulary.
+    """
+    if names is None or names == "":
+        return ()
+    if names == "auto":
+        return (engine.default_obs(rule) if rule is not None
+                else engine.OBS_METRICS)
+    if isinstance(names, str):
+        names = tuple(s.strip() for s in names.split(",") if s.strip())
+    names = tuple(names)
+    bad = [n for n in names if n not in OBS_METRICS]
+    if bad:
+        raise ValueError(
+            f"unknown obs metric(s) {bad}; known: {sorted(OBS_METRICS)}")
+    return names

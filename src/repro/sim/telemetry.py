@@ -105,27 +105,58 @@ class TelemetryRecorder:
     """
 
     def __init__(self, realized: gossip.WeightSchedule, wps: int,
-                 window: int | None = None, every: int = 1):
+                 window: int | None = None, every: int = 1,
+                 cache: bool = True):
         self.realized = realized
         self.wps = wps
         self.window = window if window is not None else max(4 * wps, 8)
         self.every = max(1, every)
         self.history: list = []
+        # Per-round cache of (W float64, bool adjacency, plan kind): the
+        # trailing windows of consecutive records overlap in all but
+        # ``wps`` rounds, so materializing/classifying each realized round
+        # once makes the per-record conversion cost O(new rounds) instead
+        # of O(window).  ``cache=False`` recomputes every round per call
+        # (the pre-cache behavior, kept for benchmarking the win).
+        self.cache = cache
+        self._rounds: dict[int, tuple] = {}
+
+    def _round(self, r: int) -> tuple:
+        """(W64, adjacency, kind) for realized round ``r``."""
+        hit = self._rounds.get(r) if self.cache else None
+        if hit is None:
+            W = np.asarray(self.realized(r), np.float64)
+            adj = np.abs(W) > 1e-12
+            adj |= np.eye(W.shape[0], dtype=bool)
+            s = self.realized.structure(r)
+            kind = s.kind if s is not None else \
+                topo.classify_adjacency(adj).kind
+            hit = (W, adj, kind)
+            if self.cache:
+                self._rounds[r] = hit
+        return hit
+
+    def _window_rounds(self, lo: int, t: int):
+        """Materialize the window [lo, t): stacked float64 matrices, the
+        stacked adjacency, and kind counts.  With the cache on, only the
+        rounds that entered the window since the last call convert."""
+        if self.cache:  # rounds now behind the window never recur
+            for r in [r for r in self._rounds if r < lo]:
+                del self._rounds[r]
+        rounds = [self._round(r) for r in range(lo, t)]
+        mats = np.stack([w for w, _, _ in rounds])
+        adjs = np.stack([a for _, a, _ in rounds])
+        kinds: dict = {}
+        for _, _, kind in rounds:
+            kinds[kind] = kinds.get(kind, 0) + 1
+        return mats, adjs, kinds
 
     def _window_metrics(self, t: int) -> dict:
         lo = max(0, t - self.window)
         if t <= lo:
             return {"window": [lo, t], "spectral_gap": None,
                     "eff_diameter": None, "kinds": {}}
-        mats = np.stack([np.asarray(self.realized(r), np.float64)
-                         for r in range(lo, t)])
-        adjs = window_adjacency(mats)
-        kinds: dict = {}
-        for r in range(lo, t):
-            s = self.realized.structure(r)
-            kind = s.kind if s is not None else \
-                topo.classify_adjacency(adjs[r - lo]).kind
-            kinds[kind] = kinds.get(kind, 0) + 1
+        mats, adjs, kinds = self._window_rounds(lo, t)
         return {"window": [lo, t],
                 "spectral_gap": round(windowed_spectral_gap(mats), 6),
                 "eff_diameter": empirical_effective_diameter(adjs),
