@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
       derived = max prog / cap over the run (<= 1).
   kernel_*           — Pallas kernels (interpret mode) vs jnp oracle.
       derived = max |kernel - oracle|.
+  compression_*      — compressed gossip (ISSUE 7): fused Pallas
+      quantized_gossip_mix vs the unfused quantize-then-mix path, and
+      convergence vs bandwidth per scheme (none/sign/int8) on the
+      federated non-iid MC-DSGT scenario; writes BENCH_compression.json.
   engine_step_*      — throughput of the engine-built distributed step,
       one row per update rule (an ``exp.sweep`` over algorithm.name);
       also writes BENCH_engine.json.
@@ -35,6 +39,10 @@ schema {name, spec_hash, wall_ms, throughput, derived}.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]
         [--json PATH]
+
+With ``--json``, every family BENCH_*.json is additionally mirrored to the
+repo root (the committed perf trajectory; see benchmarks/README.md for the
+root-vs-baselines contract).
 """
 
 from __future__ import annotations
@@ -54,6 +62,13 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 ALL_ROWS = []  # every row of the run, for the top-level --json dump
+
+# Root-canonical BENCH contract: with --json, every family artifact a
+# BenchWriter dumps is ALSO written to the repo root as BENCH_<name>.json —
+# the committed perf trajectory — while benchmarks/baselines/ holds the
+# reference copies check_regression.py gates against.
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MIRROR_TO_ROOT = False
 
 
 def _emit(name: str, us_per_call: float, derived, *, spec=None,
@@ -95,6 +110,11 @@ class BenchWriter:
         with open(path, "w") as f:
             json.dump(self.rows, f, indent=1)
         print(f"wrote {path}", file=sys.stderr)
+        if MIRROR_TO_ROOT:
+            root = os.path.join(REPO_ROOT, os.path.basename(path))
+            with open(root, "w") as f:
+                json.dump(self.rows, f, indent=1)
+            print(f"wrote {root}", file=sys.stderr)
 
 
 def record(name: str, us_per_call: float, derived) -> None:
@@ -325,6 +345,97 @@ def bench_kernels(quick: bool) -> None:
     us, out = _timed(f, ws, x)
     err = float(jnp.abs(out - ref.gossip_mix_ref(ws, x)).max())
     record("kernel_gossip_matmul", us, f"{err:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# Compressed gossip: fused kernel vs unfused, convergence vs bandwidth
+# ---------------------------------------------------------------------------
+
+def bench_compression(quick: bool) -> None:
+    """The compression-axis headline (ISSUE 7).  Rows:
+
+    ``compression_fused_kernel`` — the fused Pallas
+        ``quantized_gossip_mix`` (quantize -> mix -> dequantize -> residual
+        for all R rounds in one pass) vs the unfused
+        quantize-then-``gossip_mix`` path (R separate kernel launches with
+        a full state round-trip between them).  derived = unfused us,
+        speedup (> 1 = fused wins), and max |fused - unfused| (~0: both
+        paths share the kernels/ref.py quantization math).
+    ``compression_{none,sign,int8}`` — an ``exp.sweep`` over
+        ``compression.scheme`` on the federated non-iid MC-DSGT scenario
+        (error feedback on): final train loss vs the uncompressed run,
+        nominal bytes/round from the manifest accounting, and measured
+        cumulative wire bytes from the telemetry recorder.  The headline
+        contract: sign stays within 10% of the uncompressed final loss at
+        <= 1/8 the bytes/round.
+    Writes experiments/bench/BENCH_compression.json (mirrored to the repo
+    root under --json — the committed perf trajectory)."""
+    import tempfile
+
+    from repro import exp
+    from repro.core import compress, gossip
+    from repro.kernels import ops, ref
+
+    w = BenchWriter()
+
+    # fused vs unfused kernel wall time
+    n, R = 16, 4
+    D = 65536 if quick else 1 << 18
+    sched = gossip.theorem3_weight_schedule(n, 0.9)
+    ws = jnp.asarray(sched.stacked(0, R), jnp.float32)
+    x = jax.random.normal(jax.random.key(0), (n, D))
+    res = jnp.zeros_like(x)
+
+    @jax.jit
+    def fused(ws, x, res):
+        return ops.quantized_gossip_mix(ws, x, res, scheme="sign",
+                                        use_pallas=True)
+
+    @jax.jit
+    def unfused(ws, x, res):
+        for r in range(R):
+            deq, err = ref.quantize_dequantize_ref(x + res, scheme="sign")
+            res = err
+            x = ops.gossip_mix(ws[r:r + 1], deq, use_pallas=True)
+        return x, res
+
+    us_f, out_f = _timed(fused, ws, x, res)
+    us_u, out_u = _timed(unfused, ws, x, res)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(out_f, out_u))
+    w.row("compression_fused_kernel", us_f,
+          f"unfused_us={us_u:.1f}|speedup={us_u / max(us_f, 1e-9):.2f}x"
+          f"|rounds={R}|D={D}|err={err:.1e}")
+
+    # convergence vs bandwidth per scheme (the perf/quality headline)
+    steps = 6 if quick else 12
+    base = exp.from_dict({
+        "algorithm": {"name": "mc_dsgt", "R": 2, "gamma": 0.1},
+        "data": {"batch": 2, "seq": 32, "hetero_alpha": 0.3},
+        "topology": {"kind": "federated", "local_steps": 4},
+        "run": {"steps": steps, "nodes": 4, "log_every": steps}})
+    finals = {}
+    with tempfile.TemporaryDirectory() as td:
+        for spec in exp.sweep(base, {"compression.scheme":
+                                     list(exp.COMPRESSIONS)}):
+            scheme = spec.compression.scheme
+            spec = exp.with_field(spec, "run.telemetry",
+                                  os.path.join(td, f"{scheme}.json"))
+            t0 = time.time()
+            r = exp.run(spec, quiet=True)
+            us = (time.time() - t0) * 1e6 / steps
+            loss = float(r.history[-1]["loss"])
+            finals[scheme] = loss
+            bpr = compress.payload_bytes(r.built.state_dim, scheme,
+                                         spec.compression.group)
+            bpr0 = compress.payload_bytes(r.built.state_dim, "none")
+            w.row(f"compression_{scheme}", us,
+                  f"final_loss={loss:.4f}"
+                  f"|vs_none={loss / finals['none']:.4f}"
+                  f"|bytes_per_round={bpr}"
+                  f"|bytes_vs_none={bpr / bpr0:.4f}"
+                  f"|wire_bytes_total={r.telemetry.bytes_total}",
+                  spec=spec, throughput=round(1e6 / us, 2))
+    w.dump("experiments/bench/BENCH_compression.json")
 
 
 # ---------------------------------------------------------------------------
@@ -646,6 +757,7 @@ def bench_roofline(quick: bool) -> None:
 
 BENCHES = [
     ("theorem3", bench_theorem3),
+    ("compression", bench_compression),
     ("gossip_plan", bench_gossip_plan),
     ("sim", bench_sim),
     ("engine_step", bench_engine_step),
@@ -672,6 +784,9 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = args.quick
     json_path = args.json or (quick and "experiments/bench/BENCH.json" or None)
+    if args.json:  # --json opts into the root-canonical BENCH mirror
+        global MIRROR_TO_ROOT
+        MIRROR_TO_ROOT = True
 
     print("name,us_per_call,derived")
     for name, fn in BENCHES:

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import driver, engine
+from . import compress, driver, engine
 
 PyTree = Any
 GradFn = Callable[[PyTree, jax.Array], PyTree]
@@ -281,6 +281,7 @@ class AlgoState(NamedTuple):
     g_prev: Optional[PyTree]
     opt_state: Any
     k: jax.Array         # round counter
+    res: Optional[tuple] = None  # compressed-gossip EF residuals (x, h)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -308,6 +309,10 @@ def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm
                          "optimizer hook")
 
     def _ops(grad_fn, weights, key):
+        cmix = None
+        if rule.compression is not None:
+            cmix = compress.make_compressed_mixer(
+                lambda idx, m: mix(weights[idx], m), rule.compression)
         return engine.EngineOps(
             mix=lambda off, r, tree: multi_consensus(
                 weights[off:off + r], tree),
@@ -315,13 +320,15 @@ def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm
                                                      rule.R)),
             local_update=(local_opt.update if local_opt
                           else (lambda g, s: (g, s))),
-            cast_aux=lambda tree: tree)
+            cast_aux=lambda tree: tree,
+            cmix=cmix)
 
     def _to_engine(s: AlgoState) -> engine.EngineState:
-        return engine.EngineState(s.x, s.h, s.g_prev, s.opt_state, s.k)
+        return engine.EngineState(s.x, s.h, s.g_prev, s.opt_state, s.k,
+                                  s.res)
 
     def _to_algo(s: engine.EngineState) -> AlgoState:
-        return AlgoState(s.x, s.h, s.g_prev, s.opt, s.k)
+        return AlgoState(s.x, s.h, s.g_prev, s.opt, s.k, s.res)
 
     def init(x0: PyTree) -> AlgoState:
         return _to_algo(engine.init_state(
@@ -366,16 +373,22 @@ def plan_step(algo: DecentralizedAlgorithm, plan, *, mesh=None,
 
     def pstep(state: AlgoState, grad_fn: GradFn, tensors, t,
               key: jax.Array, obs: tuple = ()) -> AlgoState:
+        cmix = None
+        if rule.compression is not None:
+            cmix = compress.make_compressed_mixer(
+                lambda idx, m: mixer(tensors, t + idx, 1, m),
+                rule.compression)
         ops = engine.EngineOps(
             mix=lambda off, r, tree: mixer(tensors, t + off, r, tree),
             grad=lambda x: (None, engine._accumulate(grad_fn, x, key,
                                                      rule.R)),
             local_update=local_update,
-            cast_aux=lambda tree: tree)
+            cast_aux=lambda tree: tree,
+            cmix=cmix)
         es, aux = engine.step(rule, engine.EngineState(
-            state.x, state.h, state.g_prev, state.opt_state, state.k), ops,
-            obs=obs)
-        new = AlgoState(es.x, es.h, es.g_prev, es.opt, es.k)
+            state.x, state.h, state.g_prev, state.opt_state, state.k,
+            state.res), ops, obs=obs)
+        new = AlgoState(es.x, es.h, es.g_prev, es.opt, es.k, es.res)
         return (new, aux[1]) if obs else new
 
     pstep.dispatch = mixer.dispatch

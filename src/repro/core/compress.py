@@ -1,0 +1,181 @@
+"""Single-source compressed-gossip support (the spec's ``compression`` axis).
+
+Communication — not compute — is the scarce resource in the paper's
+regime, and this module makes the wire format a first-class scenario knob:
+group-wise 1-bit (``sign``) or ``int8`` quantization of every gossip
+payload with per-node error-feedback residuals (the Bagua
+low-precision-decentralized construction), applied per realized round
+inside the step's mix window.
+
+Like :mod:`repro.core.engine` for the update arithmetic, everything here
+is runtime-neutral and exists exactly once:
+
+* :class:`CompressionConfig` — the frozen runtime config an
+  :class:`repro.exp.spec.CompressionSpec` lowers to;
+* :func:`flatten_grouped` / :func:`unflatten_grouped` — stacked pytree
+  <-> (n, D) f32 matrix with every leaf padded to a multiple of ``group``,
+  so quantization groups never straddle leaves and any block size the
+  fused kernel picks sees the same group boundaries (zero padding is a
+  fixed point of quantize/mix/residual, so the transform is exact);
+* :func:`make_compressed_mixer` — wraps ANY per-round mixer (host einsum,
+  sun rewrite, staged plan dispatch, dense dist) into the error-feedback
+  compressed window ``cmix(offset, rounds, tree, res, on)``;
+* :func:`payload_bytes` — the bytes-per-round accounting used by
+  ``sim.telemetry``, the manifests, and ``bench_compression``.
+
+The quantization math itself lives in
+:func:`repro.kernels.ref.quantize_dequantize_ref` (shared verbatim with
+the fused Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref as kernels_ref
+
+PyTree = Any
+
+SCHEMES = ("none", "sign", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Runtime compression config.  ``scheme``: 'sign' (1 bit/entry) or
+    'int8'; ``error_feedback``: carry the per-node quantization error into
+    the next round's payload; ``warmup``: driver steps that gossip at full
+    precision before the scheme activates (the Bagua warm-start idiom —
+    early training is most sensitive to compression noise); ``group``:
+    entries per quantization scale."""
+
+    scheme: str = "sign"
+    error_feedback: bool = True
+    warmup: int = 0
+    group: int = 256
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES[1:]:
+            raise ValueError(f"CompressionConfig.scheme={self.scheme!r}: "
+                             f"must be one of {SCHEMES[1:]} ('none' means "
+                             "no config at all)")
+        if self.group < 1:
+            raise ValueError(f"group={self.group}: must be >= 1")
+        if self.warmup < 0:
+            raise ValueError(f"warmup={self.warmup}: must be >= 0")
+
+
+def payload_bytes(dim: int, scheme: str, group: int = 256) -> int:
+    """Nominal bytes ONE node transmits in ONE realized gossip round for a
+    ``dim``-entry state: the quantized entries plus one f32 scale per
+    group ('none' = full f32, the baseline denominator)."""
+    if scheme == "none":
+        return 4 * dim
+    groups = math.ceil(dim / group)
+    if scheme == "sign":
+        return math.ceil(dim / 8) + 4 * groups
+    if scheme == "int8":
+        return dim + 4 * groups
+    raise ValueError(f"unknown compression scheme {scheme!r} "
+                     f"(have {SCHEMES})")
+
+
+# ---------------------------------------------------------------------------
+# Stacked pytree <-> group-aligned (n, D) matrix
+# ---------------------------------------------------------------------------
+
+def flatten_grouped(tree: PyTree, group: int):
+    """Flatten a node-stacked pytree into one f32 (n, D) matrix with every
+    leaf zero-padded to a multiple of ``group``; returns (matrix, meta)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    cols, infos = [], []
+    for leaf in leaves:
+        flat = leaf.reshape(n, -1).astype(jnp.float32)
+        size = flat.shape[1]
+        pad = (-size) % group
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        cols.append(flat)
+        infos.append((leaf.shape, leaf.dtype, size + pad))
+    return jnp.concatenate(cols, axis=1), (treedef, infos)
+
+
+def unflatten_grouped(mat: jax.Array, meta) -> PyTree:
+    treedef, infos = meta
+    out, off = [], 0
+    for shape, dtype, padded in infos:
+        size = math.prod(shape[1:]) if len(shape) > 1 else 1
+        out.append(mat[:, off:off + size].reshape(shape).astype(dtype))
+        off += padded
+    return jax.tree.unflatten(treedef, out)
+
+
+def quantize_dequantize(buf: jax.Array, *, scheme: str,
+                        group: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """(dequantized payload, quantization error) of an (n, D) matrix with
+    D % group == 0 — the shared oracle math (see kernels/ref.py)."""
+    return kernels_ref.quantize_dequantize_ref(buf, scheme=scheme,
+                                               group=group)
+
+
+# ---------------------------------------------------------------------------
+# The generic compressed window mixer
+# ---------------------------------------------------------------------------
+
+def make_compressed_mixer(mix_round: Callable[[int, jax.Array], jax.Array],
+                          cfg: CompressionConfig):
+    """Lift a per-round matrix mixer into the error-feedback compressed
+    window ``cmix(offset, rounds, tree, res, on) -> (tree, res)``.
+
+    ``mix_round(idx, mat)`` applies ONE gossip round (window-relative index
+    ``idx`` = offset + r) to an (n, D) matrix — a single-leaf pytree, so
+    every existing mixer (stacked einsum, sun rewrite, plan dispatch,
+    ppermute matching) works unchanged.  ``res`` is the per-node residual
+    pytree (same structure as the state); ``on`` is the warmup gate: a
+    traced bool selecting compressed vs full-precision rounds, or None
+    when no warmup is configured (the cond is elided entirely).
+    """
+
+    def cmix(offset: int, rounds: int, tree: PyTree, res: PyTree,
+             on: Optional[jax.Array]):
+        mat, meta = flatten_grouped(tree, cfg.group)
+        rmat, rmeta = flatten_grouped(res, cfg.group)
+
+        def compressed(mat, rmat):
+            for r in range(rounds):
+                buf = mat + rmat
+                deq, err = quantize_dequantize(buf, scheme=cfg.scheme,
+                                               group=cfg.group)
+                if cfg.error_feedback:
+                    rmat = err
+                mat = mix_round(offset + r, deq)
+            return mat, rmat
+
+        def plain(mat, rmat):
+            for r in range(rounds):
+                mat = mix_round(offset + r, mat)
+            return mat, rmat
+
+        if on is None:
+            mat, rmat = compressed(mat, rmat)
+        else:
+            mat, rmat = jax.lax.cond(on, compressed, plain, mat, rmat)
+        return unflatten_grouped(mat, meta), unflatten_grouped(rmat, rmeta)
+
+    return cmix
+
+
+def init_residual(x0: PyTree, uses_tracker: bool,
+                  dtype=None) -> Tuple[PyTree, Optional[PyTree]]:
+    """Zeroed (res_x, res_h) error-feedback state matching ``x0``'s
+    structure (``res_h`` only for tracking rules — the tracker stream
+    gossips too and carries its own residual)."""
+    def zeros():
+        return jax.tree.map(
+            lambda l: jnp.zeros(l.shape, dtype or l.dtype), x0)
+    return (zeros(), zeros() if uses_tracker else None)

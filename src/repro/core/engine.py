@@ -40,6 +40,8 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import compress
+
 PyTree = Any
 GradFn = Callable[[PyTree, jax.Array], PyTree]
 
@@ -143,13 +145,18 @@ def _obs_scalars(names, *, g: PyTree, x: PyTree, pre_mix: PyTree,
 class EngineState(NamedTuple):
     """Runtime-neutral algorithm state.  ``h`` doubles as the tracker
     (tracking rules) or x^{k-1} (difference rules); unused slots may be None
-    (host) or zero trees (distributed runtime, for uniform sharding)."""
+    (host) or zero trees (distributed runtime, for uniform sharding).
+    ``res`` is the compressed-gossip error-feedback state: an
+    ``(res_x, res_h)`` pair of per-node residual trees (``res_h`` None for
+    rules without a tracker stream), or None when the rule carries no
+    compression."""
 
     x: PyTree
     h: Optional[PyTree]
     g_prev: Optional[PyTree]
     opt: Any
     k: jax.Array
+    res: Optional[Tuple] = None
 
 
 class EngineOps(NamedTuple):
@@ -167,12 +174,19 @@ class EngineOps(NamedTuple):
     cast_aux(tree)
         Storage cast for tracker state (identity on host; bf16 in dist
         when ``aux_dtype`` is set).
+    cmix(offset, rounds, tree, res, on) -> (tree, res)
+        The compressed window mixer (required when the rule carries a
+        :class:`repro.core.compress.CompressionConfig`): same rounds as
+        ``mix`` but quantizing every payload with error-feedback residual
+        ``res``; ``on`` gates warmup (see
+        :func:`repro.core.compress.make_compressed_mixer`).
     """
 
     mix: Callable[[int, int, PyTree], PyTree]
     grad: Callable[[PyTree], Tuple[Any, PyTree]]
     local_update: Callable[[PyTree, Any], Tuple[PyTree, Any]]
     cast_aux: Callable[[PyTree], PyTree]
+    cmix: Optional[Callable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +214,11 @@ class UpdateRule:
         ``mean``: h⁰ = node-mean of g⁰ replicated (Algorithm 1);
         ``local``: h⁰ = g⁰ per node (DIGing — no global reduction, in the
         local-update spirit).
+    compression
+        Optional :class:`repro.core.compress.CompressionConfig`: every
+        gossip payload (the x stream and, for tracking rules, the h
+        stream) is quantized per round with per-node error-feedback
+        residuals carried in ``EngineState.res``.  None = full precision.
     """
 
     name: str
@@ -211,6 +230,7 @@ class UpdateRule:
     shared_round: bool = False
     tracker_init: str = "mean"
     supports_local_opt: bool = True
+    compression: Optional[compress.CompressionConfig] = None
 
     def __post_init__(self):
         if self.kind not in ("sgd", "tracking", "difference"):
@@ -238,7 +258,9 @@ class UpdateRule:
 
 # The one registry.  Adding an algorithm = adding a line here (or a factory
 # below when it takes parameters beyond gamma/R).
-def make_rule(name: str, gamma: float, R: int = 1) -> UpdateRule:
+def make_rule(name: str, gamma: float, R: int = 1,
+              compression: Optional[compress.CompressionConfig] = None
+              ) -> UpdateRule:
     specs = {
         "dsgd": dict(kind="sgd"),
         "local_sgd": dict(kind="sgd", mix_before_update=True),
@@ -254,7 +276,7 @@ def make_rule(name: str, gamma: float, R: int = 1) -> UpdateRule:
     if name in ("dsgt", "d2") and R != 1:
         raise ValueError(f"{name} uses R=1 (MC-DSGT is the R-round variant)")
     return UpdateRule(name=name, gamma=gamma, R=(1 if name == "d2" else R),
-                      **specs[name])
+                      compression=compression, **specs[name])
 
 
 ALGORITHMS = ("dsgd", "local_sgd", "dsgt", "mc_dsgt", "gt_local", "d2")
@@ -291,6 +313,33 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
     gamma, R = rule.gamma, rule.R
     ops = _annotate(ops)
 
+    # Compression: route every mix through the runtime's compressed window
+    # mixer, threading the per-stream error-feedback residuals.  ``_res``
+    # collects the updated residuals as the step body runs (the closures
+    # mutate it at trace time — purely functional in the traced graph).
+    comp = rule.compression
+    if comp is None:
+        mix_x = mix_h = ops.mix
+        new_res = lambda: state.res
+    else:
+        if ops.cmix is None:
+            raise ValueError(f"rule {rule.name!r} carries compression but "
+                             "the runtime provided no EngineOps.cmix")
+        if state.res is None:
+            raise ValueError("compression needs residual state: init_state "
+                             "materializes EngineState.res")
+        _res = list(state.res)
+        on = (state.k >= comp.warmup) if comp.warmup else None
+
+        def _cmix(slot, off, r, tree):
+            with jax.named_scope("obs_mix"):
+                tree, _res[slot] = ops.cmix(off, r, tree, _res[slot], on)
+            return tree
+
+        mix_x = lambda off, r, tree: _cmix(0, off, r, tree)
+        mix_h = lambda off, r, tree: _cmix(1, off, r, tree)
+        new_res = lambda: tuple(_res)
+
     def out(metrics, *, g, x, pre_mix, post_mix, h=None):
         if not obs:
             return metrics
@@ -299,7 +348,7 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
 
     if rule.kind == "sgd":
         if rule.mix_before_update:
-            xm = ops.mix(0, rule.weights_per_step, state.x)
+            xm = mix_x(0, rule.weights_per_step, state.x)
             metrics, g = ops.grad(xm)
             upd, opt = ops.local_update(g, state.opt)
             x = _axpy(-gamma, upd, xm)
@@ -308,9 +357,10 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
             metrics, g = ops.grad(state.x)
             upd, opt = ops.local_update(g, state.opt)
             z = _axpy(-gamma, upd, state.x)
-            x = ops.mix(0, rule.weights_per_step, z)
+            x = mix_x(0, rule.weights_per_step, z)
             aux = out(metrics, g=g, x=x, pre_mix=z, post_mix=x)
-        return state._replace(x=x, opt=opt, k=state.k + 1), aux
+        return state._replace(x=x, opt=opt, k=state.k + 1,
+                              res=new_res()), aux
 
     if rule.kind == "difference":
         if state.g_prev is None:
@@ -320,33 +370,34 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
             lambda xk, xm, gk, gp: 2.0 * xk - xm.astype(xk.dtype)
             - gamma * (gk - gp.astype(gk.dtype)),
             state.x, state.h, g, state.g_prev)
-        x = ops.mix(0, 1, z)
+        x = mix_x(0, 1, z)
         aux = out(metrics, g=g, x=x, pre_mix=z, post_mix=x)
         # x^{k-1} rides in the h slot, uncast to keep the difference exact
         return EngineState(x=x, h=state.x, g_prev=ops.cast_aux(g),
-                           opt=state.opt, k=state.k + 1), aux
+                           opt=state.opt, k=state.k + 1,
+                           res=new_res()), aux
 
     # tracking
     if state.h is None:
         raise ValueError("call warm_start first (h requires g at x0)")
     d, opt = ops.local_update(state.h, state.opt)
     if rule.mix_before_update:
-        xm = ops.mix(0, R, state.x)
+        xm = mix_x(0, R, state.x)
         x = _axpy(-gamma, d, xm)
         pre, post = state.x, xm
     else:
         z = _axpy(-gamma, d, state.x)
-        x = ops.mix(0, R, z)
+        x = mix_x(0, R, z)
         pre, post = z, x
     metrics, g = ops.grad(x)
     h_off = 0 if rule.shared_round else R
     if rule.correction_in_mix:
-        h = ops.mix(h_off, R, _tracker_delta(state.h, g, state.g_prev))
+        h = mix_h(h_off, R, _tracker_delta(state.h, g, state.g_prev))
     else:
-        h = _tracker_delta(ops.mix(h_off, R, state.h), g, state.g_prev)
+        h = _tracker_delta(mix_h(h_off, R, state.h), g, state.g_prev)
     aux = out(metrics, g=g, x=x, pre_mix=pre, post_mix=post, h=h)
     return EngineState(x=x, h=ops.cast_aux(h), g_prev=ops.cast_aux(g),
-                       opt=opt, k=state.k + 1), aux
+                       opt=opt, k=state.k + 1, res=new_res()), aux
 
 
 def warm_start(rule: UpdateRule, state: EngineState,
@@ -375,11 +426,16 @@ def warm_start(rule: UpdateRule, state: EngineState,
 
 
 def init_state(rule: UpdateRule, x0: PyTree, *, opt_init=None,
-               aux_init=None) -> EngineState:
+               aux_init=None, res_dtype=None) -> EngineState:
     """Fresh state: ``aux_init`` materializes the h/g_prev slots (None →
     host-style lazy slots; the dist runtime passes a zeros/bf16 factory so
-    every state leaf exists for sharding)."""
+    every state leaf exists for sharding).  When the rule carries
+    compression, the error-feedback residuals are materialized as zeros
+    (``res_dtype`` overrides the leaf dtype — pass the runtime's
+    ``aux_dtype`` so stored residuals match ``cast_aux``'s storage)."""
     opt = opt_init(x0) if opt_init is not None else None
     mk = (lambda: aux_init(x0)) if aux_init is not None else (lambda: None)
+    res = (compress.init_residual(x0, rule.uses_tracker, dtype=res_dtype)
+           if rule.compression is not None else None)
     return EngineState(x=x0, h=mk(), g_prev=mk(), opt=opt,
-                       k=jnp.zeros((), jnp.int32))
+                       k=jnp.zeros((), jnp.int32), res=res)

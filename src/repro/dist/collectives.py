@@ -120,12 +120,14 @@ def unflatten_stacked(mat: jax.Array, meta) -> PyTree:
 
 
 def fused_multi_consensus(Ws: jax.Array, tree: PyTree, *, block_d: int = 1024,
-                          interpret: bool = True) -> PyTree:
+                          interpret="auto") -> PyTree:
     """Algorithm 2 through the Pallas ``gossip_mix`` kernel: one fused pass
     applying all R matrices with a single HBM round-trip of the state.
 
-    ``interpret=True`` is the CPU fallback (Python interpretation of the
-    kernel body); set False on real TPU hardware.
+    ``interpret`` follows the one kernel policy
+    (:func:`repro.kernels.ops.resolve_interpret`): ``"auto"`` compiles on
+    TPU backends and falls back to interpreter mode elsewhere; pass a bool
+    to force either mode.
     """
     from ..kernels import ops
 
@@ -138,3 +140,50 @@ def fused_multi_consensus(Ws: jax.Array, tree: PyTree, *, block_d: int = 1024,
     out = ops.gossip_mix(Ws.astype(jnp.float32), mat, use_pallas=True,
                          interpret=interpret, block_d=bd)
     return unflatten_stacked(out[:, :D], meta)
+
+
+def fused_quantized_consensus(Ws: jax.Array, tree: PyTree, res: PyTree, *,
+                              cfg, on=None, block_d: int = 1024,
+                              interpret="auto"):
+    """Error-feedback compressed multi-consensus through the fused Pallas
+    ``quantized_gossip_mix`` kernel: quantize -> mix -> dequantize ->
+    residual update for all R rounds in one VMEM-resident pass.
+
+    ``cfg`` is a :class:`repro.core.compress.CompressionConfig`; ``res``
+    the per-node residual pytree (same structure as ``tree``); ``on`` the
+    warmup gate (None = always compressed, else a traced bool selecting
+    the plain full-precision ``gossip_mix`` during warmup).  Returns
+    ``(mixed tree, new residual tree)``.  The group-aligned flattening
+    (:func:`repro.core.compress.flatten_grouped`) guarantees the kernel's
+    block/group boundaries match the unfused reference exactly.
+    """
+    from ..core import compress
+    from ..kernels import ops
+
+    mat, meta = compress.flatten_grouped(tree, cfg.group)
+    rmat, rmeta = compress.flatten_grouped(res, cfg.group)
+    n, D = mat.shape
+    bd = min(block_d, D)
+    bd = max(cfg.group, (bd // cfg.group) * cfg.group)
+    pad = (-D) % bd
+    if pad:  # whole zero groups: a fixed point of quantize/mix/residual
+        mat = jnp.pad(mat, ((0, 0), (0, pad)))
+        rmat = jnp.pad(rmat, ((0, 0), (0, pad)))
+    Ws = Ws.astype(jnp.float32)
+
+    def compressed(mat, rmat):
+        return ops.quantized_gossip_mix(
+            Ws, mat, rmat, scheme=cfg.scheme, group=cfg.group,
+            error_feedback=cfg.error_feedback, use_pallas=True,
+            interpret=interpret, block_d=bd)
+
+    def plain(mat, rmat):
+        return ops.gossip_mix(Ws, mat, use_pallas=True, interpret=interpret,
+                              block_d=bd), rmat
+
+    if on is None:
+        out, rout = compressed(mat, rmat)
+    else:
+        out, rout = jax.lax.cond(on, compressed, plain, mat, rmat)
+    return (compress.unflatten_grouped(out[:, :D], meta),
+            compress.unflatten_grouped(rout[:, :D], rmeta))

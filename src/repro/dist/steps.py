@@ -47,7 +47,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core import algorithms as alg, engine
+from ..core import algorithms as alg, compress, engine
 from . import collectives as coll
 
 PyTree = Any
@@ -59,23 +59,32 @@ class TrainState(NamedTuple):
     g_prev: PyTree             # previous accumulated oracle sample
     step: jax.Array            # round counter
     opt: Any = None            # local-optimizer state (framework extension)
+    res: Any = None            # compressed-gossip EF residuals (x, h)
 
 
 def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
                     R: int = 1, aux_dtype=None, gossip_impl: str = "dense",
                     sun_delta: Optional[float] = None, local_opt=None,
                     clip: Optional[float] = 1.0, unroll: bool = False,
-                    pallas_block_d: int = 1024, pallas_interpret: bool = True,
+                    pallas_block_d: int = 1024, pallas_interpret="auto",
                     plan=None, mesh=None, gossip_axis: str = "data",
-                    auto_dense: str = "einsum", obs: tuple = ()):
+                    auto_dense: str = "einsum", obs: tuple = (),
+                    compression: Optional[compress.CompressionConfig] = None):
     """Build (init_state, warm_start, step) for one decentralized algorithm.
 
     gossip_impl: 'dense' (einsum multi-consensus), 'sun' (structured
     sun-graph rewrite; ``weights`` becomes (2R, n) center masks and
     ``sun_delta`` must be given), 'pallas' (fused gossip_mix kernel;
-    ``pallas_interpret=True`` is the CPU fallback), or 'auto' (per-round
-    structured dispatch from a :class:`repro.core.gossip.GossipPlan`;
-    ``plan`` must be given).
+    ``pallas_interpret`` follows :func:`repro.kernels.ops.resolve_interpret`
+    — "auto" interprets off-TPU), or 'auto' (per-round structured dispatch
+    from a :class:`repro.core.gossip.GossipPlan`; ``plan`` must be given).
+
+    ``compression`` (a :class:`repro.core.compress.CompressionConfig`)
+    turns every gossip payload into its quantized error-feedback form; the
+    'pallas' impl routes it through the fused quantize->mix->dequantize
+    kernel, every other impl wraps its per-round mixer via
+    :func:`repro.core.compress.make_compressed_mixer` — bit-identical
+    semantics either way.
 
     For 'dense'/'sun'/'pallas' the step is ``step(state, batch, weights)``
     with ``weights`` the per-step gossip stack.  For 'auto' it is
@@ -93,7 +102,8 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
     the shared engine — no extra host syncs.
     """
     rule = engine.make_rule(algo, gamma=gamma,
-                            R=(1 if algo == "d2" else R))
+                            R=(1 if algo == "d2" else R),
+                            compression=compression)
     if gossip_impl not in ("dense", "sun", "pallas", "auto"):
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}")
     if gossip_impl == "sun" and sun_delta is None:
@@ -171,26 +181,45 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
         aux = jax.tree.map(
             lambda l: jnp.zeros(l.shape, aux_dtype or l.dtype), x)
         opt = local_opt.init(x) if local_opt is not None else None
+        res = (compress.init_residual(x, rule.uses_tracker, dtype=aux_dtype)
+               if compression is not None else None)
         return TrainState(x=x, h=aux, g_prev=aux, step=jnp.zeros((), jnp.int32),
-                          opt=opt)
+                          opt=opt, res=res)
 
     # Bind the engine's abstract ops to this runtime: the selected gossip
     # mixer, the clipped R-microbatch oracle, the local-optimizer hook and
     # the bf16 tracker cast.  The update arithmetic itself is
     # engine.step(rule, ...) — shared verbatim with the host reference.
     def _ops(batch, gossip, t):
+        cmix = None
+        if compression is not None:
+            if gossip_impl == "pallas":
+                # Fully fused: quantize -> mix -> dequantize -> residual in
+                # one VMEM-resident Pallas pass over the whole window.
+                cmix = lambda off, r, tree, res, on: \
+                    coll.fused_quantized_consensus(
+                        gossip[off:off + r], tree, res, cfg=compression,
+                        on=on, block_d=pallas_block_d,
+                        interpret=pallas_interpret)
+            else:
+                cmix = compress.make_compressed_mixer(
+                    lambda idx, m: _mix_rounds(gossip, t, idx, 1, m),
+                    compression)
         return engine.EngineOps(
             mix=lambda off, r, tree: _mix_rounds(gossip, t, off, r, tree),
             grad=lambda x: _grads(x, batch),  # metrics = scalar mean loss
             local_update=(local_opt.update if local_opt is not None
                           else (lambda g, s: (g, s))),
-            cast_aux=lambda tree: coll.tree_cast(tree, aux_dtype))
+            cast_aux=lambda tree: coll.tree_cast(tree, aux_dtype),
+            cmix=cmix)
 
     def _to_engine(s: TrainState) -> engine.EngineState:
-        return engine.EngineState(s.x, s.h, s.g_prev, s.opt, s.step)
+        return engine.EngineState(s.x, s.h, s.g_prev, s.opt, s.step,
+                                  res=s.res)
 
     def _to_train(s: engine.EngineState) -> TrainState:
-        return TrainState(x=s.x, h=s.h, g_prev=s.g_prev, step=s.k, opt=s.opt)
+        return TrainState(x=s.x, h=s.h, g_prev=s.g_prev, step=s.k, opt=s.opt,
+                          res=s.res)
 
     def warm_start(state: TrainState, batch) -> TrainState:
         ops = _ops(batch, None, 0)  # warm start never gossips

@@ -23,12 +23,14 @@ from .manifest import (  # noqa: F401
 from .registry import (  # noqa: F401
     ALGORITHMS,
     CHANNELS,
+    COMPRESSIONS,
     GOSSIP_IMPLS,
     LOCAL_OPTS,
     MOBILITY_TOPOLOGIES,
     MODEL_KINDS,
     TOPOLOGIES,
     build_channel_models,
+    build_compression,
     build_local_opt,
     build_topology,
     make_weight_schedule,
@@ -45,6 +47,7 @@ from .registry import (  # noqa: F401
 from .spec import (  # noqa: F401
     AlgorithmSpec,
     ChannelSpec,
+    CompressionSpec,
     DataSpec,
     ExperimentSpec,
     ModelRef,

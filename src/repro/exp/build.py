@@ -79,6 +79,7 @@ class Built:
     obs: Optional[obs_metrics.ObsRecorder] = None
     obs_names: tuple = ()
     tracer: Optional[obs_trace.Tracer] = None
+    state_dim: Optional[int] = None   # per-node state entries (when known)
 
     @property
     def realized(self) -> dict:
@@ -92,6 +93,18 @@ class Built:
             "plan_kinds": (None if self.plan is None
                            else sorted(set(self.plan.kinds))),
         }
+        c = self.spec.compression
+        comp = {"scheme": c.scheme, "state_dim": self.state_dim}
+        if c.enabled:
+            comp.update(error_feedback=c.error_feedback, warmup=c.warmup,
+                        group=c.group)
+        if self.state_dim is not None:
+            from ..core import compress
+            comp["bytes_per_round"] = compress.payload_bytes(
+                self.state_dim, c.scheme, c.group)
+            comp["baseline_bytes_per_round"] = compress.payload_bytes(
+                self.state_dim, "none")
+        out["compression"] = comp
         if self.spec.obs.metrics:
             out["event_log"] = self.spec.obs.metrics
             out["obs_names"] = list(self.obs_names)
@@ -134,6 +147,14 @@ def _validate(spec: ExperimentSpec) -> None:
         if r.checkpoint or r.restore:
             raise ValueError("model.kind='logreg' does not support "
                              "checkpoint/restore (use the 'arch' runtime)")
+    c = spec.compression
+    if c.scheme not in registry.COMPRESSIONS:
+        raise ValueError(f"compression.scheme={c.scheme!r}: unknown "
+                         f"(have {sorted(registry.COMPRESSIONS)})")
+    if c.group < 1:
+        raise ValueError(f"compression.group={c.group}: must be >= 1")
+    if c.warmup < 0:
+        raise ValueError(f"compression.warmup={c.warmup}: must be >= 0")
     o = spec.obs
     if o.sink not in registry.SINKS:
         raise ValueError(f"obs.sink={o.sink!r}: unknown "
@@ -156,7 +177,8 @@ def build(spec: ExperimentSpec) -> Built:
     # R (consensus/accumulation rounds) is mc_dsgt's knob; every other rule
     # is defined at R=1 and the engine enforces it
     R = al.R if al.name == "mc_dsgt" else 1
-    rule = engine.make_rule(al.name, gamma=al.gamma, R=R)
+    comp = registry.build_compression(spec.compression)
+    rule = engine.make_rule(al.name, gamma=al.gamma, R=R, compression=comp)
     wps = rule.weights_per_step
 
     # horizon only matters for the non-periodic schedules (resampled
@@ -174,10 +196,11 @@ def build(spec: ExperimentSpec) -> Built:
                                                    rounds=horizon)
     plan = sched.plan(0, sched.period) if rs.gossip_impl == "auto" else None
     telem = None
-    if fault_models or rs.telemetry or \
+    if fault_models or rs.telemetry or comp is not None or \
             spec.topology.kind in registry.MOBILITY_TOPOLOGIES:
         telem = sim_telemetry.TelemetryRecorder(sched, wps=wps,
-                                                every=rs.log_every)
+                                                every=rs.log_every,
+                                                compression=comp)
     built = Built(spec=spec, rule=rule, wps=wps, horizon=horizon,
                   schedule=sched, plan=plan, fault_models=fault_models,
                   local_opt=registry.build_local_opt(al.local_opt),
@@ -196,6 +219,14 @@ def build(spec: ExperimentSpec) -> Built:
             cfg, n, R, spec.data.batch, spec.data.seq, seed=rs.seed,
             active_vocab=spec.data.active_vocab,
             hetero_alpha=spec.data.hetero_alpha)
+        try:  # abstract eval only — no weight materialization
+            shapes = jax.eval_shape(
+                lambda key: built.model.init(key, jnp.float32),
+                jax.random.key(0))
+            built.state_dim = sum(int(l.size)
+                                  for l in jax.tree.leaves(shapes))
+        except Exception:
+            built.state_dim = None
     else:
         mr = spec.model
         if spec.data.hetero_alpha is not None:
@@ -209,6 +240,7 @@ def build(spec: ExperimentSpec) -> Built:
         built.grad_fn = lambda xs, key: stoch(xs, H, y, key, batch)
         built.eval_fn = lambda xb: gnorm2(xb, H, y)
         built.x0 = jnp.zeros((n, mr.d))
+        built.state_dim = mr.d
     return built
 
 
@@ -318,7 +350,7 @@ def _run_arch(built: Built, *, quiet: bool = False) -> Result:
         gamma=spec.algorithm.gamma, R=built.rule.R,
         gossip_impl=rs.gossip_impl, plan=built.plan,
         local_opt=built.local_opt,
-        pallas_interpret=jax.default_backend() != "tpu",
+        compression=built.rule.compression,
         obs=built.obs_names)
 
     state = init_state(jax.random.key(rs.seed), rs.nodes, jnp.float32)

@@ -14,7 +14,7 @@ from typing import Callable, Dict
 import numpy as np
 
 from .. import optim
-from ..core import engine, gossip, topology as topo
+from ..core import compress, engine, gossip, topology as topo
 from ..obs import metrics as obs_metrics, optimality as obs_optimality
 from ..sim import channel as sim_channel, faults as sim_faults, \
     mobility as sim_mobility
@@ -182,6 +182,23 @@ LOCAL_OPTS: Dict[str, Callable | None] = {
 GOSSIP_IMPLS = ("dense", "pallas", "auto")
 
 MODEL_KINDS = ("arch", "logreg")
+
+# Gossip payload compression schemes (core.compress owns the vocabulary).
+COMPRESSIONS = compress.SCHEMES
+
+
+def build_compression(s) -> compress.CompressionConfig | None:
+    """Lower a :class:`repro.exp.spec.CompressionSpec` to the runtime
+    :class:`repro.core.compress.CompressionConfig` (None when scheme is
+    'none' — every runtime treats that as the uncompressed fast path)."""
+    if s.scheme not in COMPRESSIONS:
+        raise ValueError(f"unknown compression scheme {s.scheme!r} "
+                         f"(have {sorted(COMPRESSIONS)})")
+    if s.scheme == "none":
+        return None
+    return compress.CompressionConfig(scheme=s.scheme,
+                                      error_feedback=s.error_feedback,
+                                      warmup=s.warmup, group=s.group)
 
 
 def build_local_opt(name: str):

@@ -104,6 +104,25 @@ class ModelRef:
 
 
 @dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Gossip payload compression (:mod:`repro.core.compress`).  ``scheme``
+    is a :data:`repro.exp.registry.COMPRESSIONS` key (``'none'`` = full
+    f32, the default); ``error_feedback`` carries each round's
+    quantization error into the next payload; ``warmup`` gossips at full
+    precision for the first N driver steps; ``group`` is entries per
+    quantization scale (one f32 scale transmitted per group)."""
+
+    scheme: str = "none"
+    error_feedback: bool = True
+    warmup: int = 0
+    group: int = 256
+
+    @property
+    def enabled(self) -> bool:
+        return self.scheme != "none"
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """Run shape and I/O: everything that is not the scenario itself."""
 
@@ -156,13 +175,15 @@ class ExperimentSpec:
     algorithm: AlgorithmSpec = AlgorithmSpec()
     topology: TopologySpec = TopologySpec()
     channel: ChannelSpec = ChannelSpec()
+    compression: CompressionSpec = CompressionSpec()
     run: RunSpec = RunSpec()
     obs: ObsSpec = ObsSpec()
 
 
 _SECTION_TYPES = {"model": ModelRef, "data": DataSpec,
                   "algorithm": AlgorithmSpec, "topology": TopologySpec,
-                  "channel": ChannelSpec, "run": RunSpec, "obs": ObsSpec}
+                  "channel": ChannelSpec, "compression": CompressionSpec,
+                  "run": RunSpec, "obs": ObsSpec}
 
 
 # ---------------------------------------------------------------------------

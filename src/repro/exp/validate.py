@@ -4,7 +4,7 @@ and that every checked-in manifest still parses (schema drift fails fast).
     PYTHONPATH=src python -m repro.exp.validate [--examples DIR]
         [--manifests GLOB] [--steps N]
 
-Three passes:
+Four passes:
 
 1. every ``SPECS`` entry exported by the example scripts is rebuilt with a
    tiny run shape (``--steps``, no checkpoint/telemetry/obs I/O) and
@@ -12,7 +12,10 @@ Three passes:
 2. the observability path (:mod:`repro.obs`) is smoked: a tiny
    ObsSpec-enabled run must produce a parseable JSONL event log covering
    every step, a manifest that round-trips, and a report.py render;
-3. every manifest matching ``--manifests`` (the checked-in scenario
+3. the compressed-gossip axis is smoked: {sign, int8} x {20% link drop,
+   federated} MC-DSGT cells run end to end and must report bytes telemetry
+   and a realized bytes/round priced at the scheme's wire format;
+4. every manifest matching ``--manifests`` (the checked-in scenario
    manifests under ``experiments/manifests/`` by default) is round-tripped
    through the strict ``from_dict``/``to_dict`` pair, and the run fails if
    fewer than ``--min-manifests`` matched (a vacuous glob is a failure,
@@ -98,6 +101,48 @@ def validate_obs(steps: int) -> list[str]:
     return failures
 
 
+def validate_compression(steps: int, only: str = None) -> list[str]:
+    """Smoke the compressed-gossip axis end to end: {sign, int8} x {20%
+    link drop, federated} MC-DSGT cells, each a 2-step ``exp.run`` that
+    must produce bytes telemetry and a realized-compression manifest block
+    priced at the scheme's wire format."""
+    from ..core import compress
+
+    failures = []
+    scenarios = {
+        "drop20": {"topology": {"kind": "waypoint-mobility", "radius": 0.45},
+                   "channel": {"link_drop": 0.2}},
+        "federated": {"topology": {"kind": "federated", "local_steps": 2}},
+    }
+    for scen, sections in scenarios.items():
+        base = S.from_dict({
+            "model": {"kind": "logreg", "d": 32, "m": 64},
+            "algorithm": {"name": "mc_dsgt", "R": 2, "gamma": 0.2},
+            "run": {"steps": steps, "nodes": 8, "eval_every": 1},
+            "compression": {"group": 16},
+            **sections})
+        for spec in S.sweep(base, {"compression.scheme": ["sign", "int8"]}):
+            tag = f"compression:{scen}-{spec.compression.scheme}"
+            if only and only not in tag:
+                continue
+            try:
+                result = _run(spec, quiet=True)
+                assert result.telemetry is not None, "no telemetry recorder"
+                assert result.telemetry.bytes_total > 0
+                rc = result.built.realized["compression"]
+                want = compress.payload_bytes(
+                    spec.model.d, spec.compression.scheme,
+                    spec.compression.group)
+                assert rc["bytes_per_round"] == want, rc
+                assert rc["bytes_per_round"] < rc["baseline_bytes_per_round"]
+                print(f"ok   {tag}  [{S.spec_hash(spec)}]  "
+                      f"wire_bytes={result.telemetry.bytes_total}")
+            except Exception as e:  # noqa: BLE001 - collect all failures
+                failures.append(f"{tag}: {type(e).__name__}: {e}")
+                print(f"FAIL {tag}: {e}")
+    return failures
+
+
 def validate_manifests(pattern: str) -> list[str]:
     """Strict round-trip of every manifest matching ``pattern``; returns
     failure strings (empty = all good)."""
@@ -152,6 +197,8 @@ def main(argv=None) -> int:
 
     if not args.only:
         failures += validate_obs(args.steps)
+    if not args.only or "compression" in args.only:
+        failures += validate_compression(args.steps, args.only)
 
     mfails = validate_manifests(args.manifests)
     n_manifests = len(glob.glob(args.manifests))

@@ -1,8 +1,11 @@
 """Jitted public wrappers around the Pallas kernels.
 
-``use_pallas`` selects the kernel path; on this CPU container kernels run
-with interpret=True (Python interpretation of the kernel body).  On real
-TPU hardware set ``interpret=False``.  The model code calls through these
+``use_pallas`` selects the kernel path; ``interpret`` controls HOW the
+kernel runs and defaults to ``"auto"``: compiled on TPU backends,
+interpreter mode (Python evaluation of the kernel body) everywhere else.
+So ``use_pallas=True`` means *compiled wherever a backend supports it* —
+callers only override ``interpret`` explicitly to force one mode (tests,
+interpreter-mode debugging on TPU).  The model code calls through these
 wrappers so a single flag flips the whole model between the jnp reference
 path (used for dry-run lowering) and the kernel path.
 """
@@ -19,41 +22,72 @@ from .decode_attention import decode_attention as _decode
 from .flash_attention import flash_attention as _flash
 from .gossip_matmul import gossip_mix as _gossip
 from .linear_recurrence import linear_recurrence as _linrec
+from .quantized_gossip import quantized_gossip_mix as _qgossip
+
+
+def resolve_interpret(interpret) -> bool:
+    """The one interpret policy: ``"auto"`` -> interpret unless the default
+    backend is a TPU; booleans pass through.  Resolved at trace time (the
+    flag is a static argument), so jitted callers specialize correctly."""
+    if interpret == "auto":
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
                                              "interpret", "block_q", "block_k"))
 def attention(q, k, v, *, causal=True, window=0, use_pallas=False,
-              interpret=True, block_q=128, block_k=128):
+              interpret="auto", block_q=128, block_k=128):
     if use_pallas:
         return _flash(q, k, v, causal=causal, window=window,
-                      block_q=block_q, block_k=block_k, interpret=interpret)
+                      block_q=block_q, block_k=block_k,
+                      interpret=resolve_interpret(interpret))
     return ref.attention_ref(q, k, v, causal=causal, window=window)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "use_pallas",
                                              "interpret", "block_k"))
 def decode_attention(q, k, v, kpos, pos, *, window=0, use_pallas=False,
-                     interpret=True, block_k=256):
+                     interpret="auto", block_k=256):
     if use_pallas:
         return _decode(q, k, v, kpos, pos, window=window, block_k=block_k,
-                       interpret=interpret)
+                       interpret=resolve_interpret(interpret))
     return ref.decode_attention_ref(q, k, v, kpos, pos, window=window)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
                                              "block_t", "block_c"))
-def linear_recurrence(a, b, *, use_pallas=False, interpret=True,
+def linear_recurrence(a, b, *, use_pallas=False, interpret="auto",
                       block_t=128, block_c=512):
     if use_pallas:
         return _linrec(a, b, block_t=block_t, block_c=block_c,
-                       interpret=interpret)
+                       interpret=resolve_interpret(interpret))
     return ref.linear_recurrence_ref(a, b)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
                                              "block_d"))
-def gossip_mix(ws, x, *, use_pallas=False, interpret=True, block_d=1024):
+def gossip_mix(ws, x, *, use_pallas=False, interpret="auto", block_d=1024):
     if use_pallas:
-        return _gossip(ws, x, block_d=block_d, interpret=interpret)
+        return _gossip(ws, x, block_d=block_d,
+                       interpret=resolve_interpret(interpret))
     return ref.gossip_mix_ref(ws, x)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "group",
+                                             "error_feedback", "use_pallas",
+                                             "interpret", "block_d"))
+def quantized_gossip_mix(ws, x, res, *, scheme, group=256,
+                         error_feedback=True, use_pallas=False,
+                         interpret="auto", block_d=1024):
+    """Error-feedback compressed multi-consensus on an (n, D) state matrix:
+    per round, quantize (x + res) group-wise, mix the dequantized payload,
+    keep the quantization error as the next round's residual.  Returns
+    (mixed x, final residual)."""
+    if use_pallas:
+        return _qgossip(ws, x, res, scheme=scheme, group=group,
+                        error_feedback=error_feedback, block_d=block_d,
+                        interpret=resolve_interpret(interpret))
+    return ref.quantized_gossip_mix_ref(ws, x, res, scheme=scheme,
+                                        group=group,
+                                        error_feedback=error_feedback)

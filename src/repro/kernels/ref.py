@@ -66,3 +66,50 @@ def gossip_mix_ref(ws, x):
     for r in range(ws.shape[0]):
         out = ws[r].astype(jnp.float32) @ out
     return out.astype(x.dtype)
+
+
+def quantize_dequantize_ref(buf, *, scheme, group=256):
+    """Group-wise quantize -> dequantize of an (n, D) f32 matrix
+    (D % group == 0); returns (dequantized, error = buf - dequantized).
+
+    ``sign``: 1 bit/entry + one f32 scale per (node, group), scale =
+    mean|buf| over the group (the 1-bit scheme of Bernstein et al. /
+    Bagua's low-precision decentralized path).  ``int8``: symmetric
+    absmax/127 per (node, group).  Pure jnp, so the SAME function is the
+    test oracle, the unfused host path, and the Pallas kernel body — the
+    quantization math exists exactly once.
+    """
+    n, D = buf.shape
+    g = buf.reshape(n, D // group, group)
+    if scheme == "sign":
+        scale = jnp.mean(jnp.abs(g), axis=-1, keepdims=True)
+        deq = jnp.sign(g) * scale
+    elif scheme == "int8":
+        scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True) / 127.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(g / safe), -127.0, 127.0)
+        deq = q * scale
+    else:
+        raise ValueError(f"unknown compression scheme {scheme!r} "
+                         "(quantizing schemes: 'sign', 'int8')")
+    deq = deq.reshape(n, D)
+    return deq, buf - deq
+
+
+def quantized_gossip_mix_ref(ws, x, res, *, scheme, group=256,
+                             error_feedback=True):
+    """Error-feedback compressed multi-consensus, the oracle for the fused
+    Pallas kernel.  Per round r: buf = x + res; q = deq(quant(buf));
+    res <- buf - q (when ``error_feedback``); x <- ws[r] @ q.
+
+    ws: (R, n, n); x, res: (n, D) with D % group == 0.
+    Returns (mixed x, final residual)."""
+    out = x.astype(jnp.float32)
+    rs = res.astype(jnp.float32)
+    for r in range(ws.shape[0]):
+        buf = out + rs
+        deq, err = quantize_dequantize_ref(buf, scheme=scheme, group=group)
+        if error_feedback:
+            rs = err
+        out = ws[r].astype(jnp.float32) @ deq
+    return out.astype(x.dtype), rs.astype(res.dtype)

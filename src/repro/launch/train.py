@@ -63,6 +63,10 @@ FLAG_TO_FIELD = {
     "churn": "channel.churn",
     "straggler": "channel.straggler",
     "telemetry": "run.telemetry",
+    "compress": "compression.scheme",
+    "compress_group": "compression.group",
+    "compress_warmup": "compression.warmup",
+    "error_feedback": "compression.error_feedback",
     "hetero_alpha": "data.hetero_alpha",
     "R": "algorithm.R",
     "gamma": "algorithm.gamma",
@@ -134,6 +138,21 @@ def build_parser() -> argparse.ArgumentParser:
                     help="write the repro.sim mixing-telemetry JSON history "
                          "(consensus distance, windowed spectral gap, "
                          "realized effective diameter) to PATH")
+    ap.add_argument("--compress", choices=list(exp.COMPRESSIONS),
+                    help="gossip payload compression scheme: sign (1 "
+                         "bit/entry + one f32 scale per group) or int8 "
+                         "(absmax per group), with per-node error-feedback "
+                         "residuals; none = full-precision f32 payloads")
+    ap.add_argument("--compress-group", type=int,
+                    help="entries per quantization scale group "
+                         "(default 256)")
+    ap.add_argument("--compress-warmup", type=int,
+                    help="driver steps that gossip at full precision "
+                         "before the compression scheme activates")
+    ap.add_argument("--no-error-feedback", dest="error_feedback",
+                    action="store_false",
+                    help="disable the error-feedback residual (pure "
+                         "quantized gossip; EF is on by default)")
     ap.add_argument("--hetero-alpha", type=float,
                     help="Dirichlet(alpha) data heterogeneity across nodes: "
                          "each node draws its token distribution from a "

@@ -63,12 +63,18 @@ EVENT_FIELDS = {
     "eff_diameter": "realized-window effective diameter (chained "
                     "TelemetryRecorder)",
     "kinds": "realized plan-kind counts (chained TelemetryRecorder)",
+    "bytes": "wire bytes this step's realized gossip transmitted — the "
+             "compressed payload format once past warmup (chained "
+             "TelemetryRecorder)",
+    "bytes_total": "cumulative wire bytes since step 0 (chained "
+                   "TelemetryRecorder)",
     "value": "eval_fn(x_bar) at an eval event",
 }
 
 # Keys the chained TelemetryRecorder contributes to a step event (its
 # step/t/loss/sec/consensus duplicates the recorder's own fields).
-_TELEMETRY_KEYS = ("window", "spectral_gap", "eff_diameter", "kinds")
+_TELEMETRY_KEYS = ("window", "spectral_gap", "eff_diameter", "kinds",
+                   "bytes", "bytes_total")
 
 
 @runtime_checkable

@@ -48,6 +48,13 @@ TELEMETRY_FIELDS = {
                     "never connects",
     "kinds": "realized gossip-plan round kinds in the window, counted "
              "(empty = fully dropped rounds)",
+    "bytes": "payload bytes transmitted by all active senders over the "
+             "rounds this step consumed — the quantized wire format "
+             "(repro.core.compress.payload_bytes) once compression is on "
+             "and past warmup, full f32 otherwise; dropped rounds and "
+             "silent nodes transmit nothing",
+    "bytes_total": "cumulative payload bytes since step 0 (accumulated "
+                   "every step, including steps the log cadence skips)",
     "sec": "wall-clock seconds this step took",
 }
 
@@ -106,12 +113,19 @@ class TelemetryRecorder:
 
     def __init__(self, realized: gossip.WeightSchedule, wps: int,
                  window: int | None = None, every: int = 1,
-                 cache: bool = True):
+                 cache: bool = True, compression=None):
         self.realized = realized
         self.wps = wps
         self.window = window if window is not None else max(4 * wps, 8)
         self.every = max(1, every)
         self.history: list = []
+        # Bytes accounting: ``compression`` is a
+        # repro.core.compress.CompressionConfig (None = full-precision f32
+        # payloads); the per-node state dim is read lazily off the first
+        # recorded state so the recorder needs no model knowledge.
+        self.compression = compression
+        self.bytes_total = 0
+        self._dim: Optional[int] = None
         # Per-round cache of (W float64, bool adjacency, plan kind): the
         # trailing windows of consecutive records overlap in all but
         # ``wps`` rounds, so materializing/classifying each realized round
@@ -162,8 +176,35 @@ class TelemetryRecorder:
                 "eff_diameter": empirical_effective_diameter(adjs),
                 "kinds": kinds}
 
+    def _step_bytes(self, k: int, t: int, state: Any) -> int:
+        """Wire bytes the step that just consumed rounds [t - wps, t)
+        transmitted: per active sender (a node with at least one realized
+        off-diagonal edge that round), the scheme's payload — full f32
+        while compression is off or still in warmup."""
+        from ..core import compress
+
+        if self._dim is None:
+            leaves = jax.tree.leaves(state.x)
+            n = leaves[0].shape[0]
+            self._dim = sum(int(np.prod(l.shape)) for l in leaves) // n
+        c = self.compression
+        if c is None or k < c.warmup:
+            per = compress.payload_bytes(self._dim, "none")
+        else:
+            per = compress.payload_bytes(self._dim, c.scheme, c.group)
+        total = 0
+        for r in range(max(0, t - self.wps), t):
+            _, adj, _ = self._round(r)
+            off = adj & ~np.eye(adj.shape[0], dtype=bool)
+            total += int(np.count_nonzero(off.any(axis=1))) * per
+        return total
+
     def record(self, k: int, t: int, state: Any, out: Any,
                dt: float) -> Optional[dict]:
+        # bytes accumulate on EVERY step — before the log-cadence gate —
+        # so bytes_total stays exact at any ``every``
+        step_bytes = self._step_bytes(int(k), int(t), state)
+        self.bytes_total += step_bytes
         if k % self.every:
             return None
         loss = None
@@ -171,6 +212,7 @@ class TelemetryRecorder:
             loss = float(jax.device_get(out["loss"]))
         entry = {"step": int(k), "t": int(t), "loss": loss,
                  "consensus": consensus_distance(state.x),
+                 "bytes": step_bytes, "bytes_total": self.bytes_total,
                  "sec": round(float(dt), 4)}
         entry.update(self._window_metrics(int(t)))
         self.history.append(entry)

@@ -128,6 +128,61 @@ def test_hetero_stream_logits_computed_once():
     assert s.node_token_logits() is first
 
 
+def test_trainstate_roundtrip_bf16_compression_residuals(tmp_path):
+    """Error-feedback residual state rides the checkpoint: bf16 res leaves
+    for both the x and tracker streams survive bit-exactly, and the restored
+    state continues the compressed trajectory identically."""
+    from test_engine import ToyModel, _toy_batch
+
+    from repro.core import compress
+
+    model = ToyModel()
+    n = 4
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    init_s, warm, step = dsteps.make_train_step(
+        model, None, algo="mc_dsgt", gamma=0.1, R=2,
+        aux_dtype=jnp.bfloat16,
+        compression=compress.CompressionConfig(scheme="sign", group=4))
+    Ws = jnp.asarray(sched.stacked(0, 2))
+    batch = _toy_batch(n, 2, 3, model.d, 1)
+    state = warm(init_s(jax.random.key(0), n, jnp.float32), batch)
+    state, _ = jax.jit(step)(state, batch, Ws)
+    res_x, res_h = state.res
+    assert res_h is not None  # tracker stream has its own residual
+    assert jax.tree.leaves(res_h)[0].dtype == jnp.bfloat16
+    assert any(float(jnp.abs(l).max()) > 0 for l in jax.tree.leaves(res_x))
+    restored = _roundtrip(state, tmp_path, step=1)
+    _assert_bit_exact(state, restored)
+    after_a, _ = jax.jit(step)(state, batch, Ws)
+    after_b, _ = jax.jit(step)(restored, batch, Ws)
+    _assert_bit_exact(after_a, after_b)
+
+
+def test_restore_resumes_mid_warmup_with_scheme_still_disabled(tmp_path):
+    """A --restore inside the compression warmup must keep gossiping at full
+    precision until the ORIGINAL activation step: the gate compares the
+    restored round counter, not steps-since-restore, so the continuation
+    matches the uninterrupted compressed run step for step."""
+    from repro.launch.train import main as train_main
+
+    ckpt = str(tmp_path / "resume_comp.msgpack")
+    base = ["--arch", "qwen1.5-0.5b", "--preset", "reduced", "--nodes", "4",
+            "--batch", "1", "--seq", "16", "--algo", "mc_dsgt", "--R", "2",
+            "--compress", "sign", "--compress-group", "64",
+            "--compress-warmup", "5"]
+    full = train_main(base + ["--steps", "8"])
+    _ = train_main(base + ["--steps", "3", "--checkpoint", ckpt])
+    cont = train_main(base + ["--steps", "5", "--restore", ckpt])
+    assert [h["step"] for h in cont] == [3, 4, 5, 6, 7]
+    # steps 3-4 are still inside warmup; the scheme flips on at step 5.  A
+    # gate keyed to steps-since-restore would compress steps 3-7 and
+    # diverge immediately; dropping the residual would diverge at 5+.
+    for h_full, h_cont in zip(full[3:], cont):
+        np.testing.assert_allclose(h_full["loss"], h_cont["loss"], rtol=1e-6)
+        np.testing.assert_allclose(h_full["consensus"], h_cont["consensus"],
+                                   rtol=1e-4, atol=1e-7)
+
+
 def test_restore_resumes_schedule_at_correct_t_offset(tmp_path):
     """--restore continuation == the uninterrupted run, step for step, on a
     federated schedule where the round phase matters (period 5: four empty

@@ -1,0 +1,366 @@
+"""Compressed gossip (ISSUE 7): quantization parity, error-feedback
+residual threading, warmup gating, and bytes accounting.
+
+The quantization math exists once (kernels/ref.py); everything here pins
+the layers that consume it to that single source: the fused Pallas kernel
+(any legal block size), the generic compressed mixer the host and dist
+runtimes wrap around their per-round mixers, the engine's residual
+threading, and the telemetry byte accounting the manifests report.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import algorithms as alg, compress, engine, gossip
+from repro.dist import collectives as coll, steps as dsteps
+from repro.kernels import ops, ref
+
+SCHEMES = ("sign", "int8")
+
+
+def _ws(n, rounds, beta=0.6, seed=0):
+    sched = gossip.theorem3_weight_schedule(n, beta)
+    return jnp.asarray(sched.stacked(seed, rounds), jnp.float32)
+
+
+def _tree_err(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# 1. Fused kernel == kernels/ref.py, property-tested across schemes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), scheme_i=st.integers(0, 1),
+       ef=st.booleans(), rounds=st.integers(1, 3),
+       group_i=st.integers(0, 1), bd_i=st.integers(0, 2))
+def test_property_fused_kernel_matches_ref(seed, scheme_i, ef, rounds,
+                                           group_i, bd_i):
+    scheme = SCHEMES[scheme_i]
+    group = (64, 128)[group_i]
+    n, D = 8, 512
+    block_d = (group, 256, D)[bd_i]
+    k = jax.random.key(seed)
+    x = jax.random.normal(k, (n, D))
+    res = 0.1 * jax.random.normal(jax.random.fold_in(k, 1), (n, D))
+    ws = _ws(n, rounds, seed=seed % 4)
+    o_ref, r_ref = ref.quantized_gossip_mix_ref(
+        ws, x, res, scheme=scheme, group=group, error_feedback=ef)
+    o_k, r_k = ops.quantized_gossip_mix(
+        ws, x, res, scheme=scheme, group=group, error_feedback=ef,
+        use_pallas=True, block_d=block_d)
+    np.testing.assert_allclose(o_k, o_ref, atol=1e-5)
+    np.testing.assert_allclose(r_k, r_ref, atol=1e-5)
+
+
+def test_quantize_int8_zero_group_guard():
+    """An all-zero group must dequantize to zeros (no 0/0 NaN) and carry a
+    zero residual for every scheme."""
+    buf = jnp.zeros((2, 64))
+    for scheme in SCHEMES:
+        deq, err = ref.quantize_dequantize_ref(buf, scheme=scheme, group=32)
+        assert not np.any(np.isnan(deq)) and not np.any(np.isnan(err))
+        np.testing.assert_array_equal(deq, 0.0)
+        np.testing.assert_array_equal(err, 0.0)
+
+
+def test_payload_bytes_formula():
+    # none = full f32; sign = 1 bit/entry + one f32 scale per group;
+    # int8 = 1 byte/entry + one f32 scale per group
+    assert compress.payload_bytes(1000, "none") == 4000
+    assert compress.payload_bytes(1000, "sign") == 125 + 4 * 4
+    assert compress.payload_bytes(1000, "int8") == 1000 + 4 * 4
+    assert compress.payload_bytes(1000, "sign", group=1000) == 125 + 4
+    with pytest.raises(ValueError):
+        compress.payload_bytes(10, "fp4")
+
+
+def test_compression_config_validates():
+    with pytest.raises(ValueError):
+        compress.CompressionConfig(scheme="none")
+    with pytest.raises(ValueError):
+        compress.CompressionConfig(scheme="sign", group=0)
+    with pytest.raises(ValueError):
+        compress.CompressionConfig(scheme="int8", warmup=-1)
+
+
+# ---------------------------------------------------------------------------
+# 2. flatten_grouped: group-aligned padding is lossless and exact
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100), group=st.sampled_from([4, 8, 32]))
+def test_property_flatten_grouped_roundtrip(seed, group):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 6))
+    tree = {"a": jnp.asarray(rng.normal(size=(n, int(rng.integers(1, 40))))),
+            "b": {"c": jnp.asarray(
+                rng.normal(size=(n, 3, int(rng.integers(1, 7)))),
+                dtype=jnp.bfloat16)},
+            "d": jnp.asarray(rng.normal(size=(n,)))}
+    mat, meta = compress.flatten_grouped(tree, group)
+    assert mat.shape[1] % group == 0
+    back = compress.unflatten_grouped(mat, meta)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_zero_padding_is_quantization_fixed_point():
+    """Leaf padding columns stay exactly zero through quantize / mix /
+    residual, so per-leaf group alignment never leaks into real entries."""
+    n, size, group = 4, 10, 8  # pads 10 -> 16
+    tree = {"a": jax.random.normal(jax.random.key(0), (n, size))}
+    mat, _ = compress.flatten_grouped(tree, group)
+    ws = _ws(n, 2)
+    out, res = ref.quantized_gossip_mix_ref(ws, mat, jnp.zeros_like(mat),
+                                            scheme="sign", group=group)
+    np.testing.assert_array_equal(np.asarray(out[:, size:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(res[:, size:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# 3. One implementation across runtimes: dense == pallas == auto plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("algo", ["mc_dsgt", "dsgd"])
+def test_dist_dense_equals_pallas_equals_auto(algo, scheme):
+    from test_engine import ToyModel, _toy_batch
+
+    model = ToyModel()
+    n, R = 8, 2 if algo == "mc_dsgt" else 1
+    cfg = compress.CompressionConfig(scheme=scheme, group=4)
+    sched = gossip.theorem3_weight_schedule(n, 0.6)
+    plan = sched.plan()
+    batch0 = _toy_batch(n, R, 3, model.d, seed=0)
+    batch1 = _toy_batch(n, R, 3, model.d, seed=1)
+    wps = engine.make_rule(algo, gamma=0.1, R=R).weights_per_step
+    Ws = jnp.asarray(sched.stacked(0, max(wps, 1)))
+
+    states = {}
+    for impl in ("dense", "pallas", "auto"):
+        init, warm, step = dsteps.make_train_step(
+            model, None, algo=algo, gamma=0.1, R=R, gossip_impl=impl,
+            compression=cfg, pallas_block_d=8,
+            plan=(plan if impl == "auto" else None))
+        s = warm(init(jax.random.key(0), n, jnp.float32), batch0)
+        assert s.res is not None
+        if impl == "auto":
+            tensors = jax.tree.map(jnp.asarray, plan.tensors())
+            jstep = (jax.jit(step, static_argnums=3)
+                     if step.gossip_dispatch == "static" else jax.jit(step))
+            for t in range(2):
+                s, _ = jstep(s, batch1, tensors, t * wps)
+        else:
+            for _ in range(2):
+                s, _ = jax.jit(step)(s, batch1, Ws)
+        states[impl] = s
+
+    # step 2 of dense/pallas reuses W(0); auto follows the true schedule, so
+    # compare everyone after step 1 ... except pallas/dense, comparable at 2
+    assert _tree_err(states["dense"].x, states["pallas"].x) < 1e-5
+    assert _tree_err(states["dense"].res[0], states["pallas"].res[0]) < 1e-5
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_host_dense_equals_plan_equals_dist(scheme):
+    """from_rule (stacked einsum), plan_step (structured lowering), and the
+    dist fused path all produce the same compressed trajectory."""
+    n, d, R = 8, 12, 2
+    cfg = compress.CompressionConfig(scheme=scheme, group=4)
+    rule = engine.make_rule("mc_dsgt", gamma=0.1, R=R, compression=cfg)
+    sched = gossip.theorem3_weight_schedule(n, 0.6)
+    plan = sched.plan()
+    wps = rule.weights_per_step
+
+    A = jax.random.normal(jax.random.key(1), (n, 5, d))
+    b = jax.random.normal(jax.random.key(2), (n, 5))
+
+    def grad_fn(x, key):
+        def per(xi, Ai, bi):
+            r = Ai @ xi - bi
+            return 2 * Ai.T @ r / r.shape[0]
+        return jax.vmap(per)(x, A, b)
+
+    runner = alg.from_rule(rule)
+    x0 = jax.random.normal(jax.random.key(0), (n, d))
+
+    sd = runner.warm(runner.init(x0), grad_fn, jax.random.key(9))
+    sp = sd
+    tensors = jax.tree.map(jnp.asarray, plan.tensors())
+    pstep = alg.plan_step(runner, plan)
+    for t in range(3):
+        Ws = jnp.asarray(sched.stacked(t * wps, wps))
+        sd = runner.step(sd, grad_fn, Ws, jax.random.key(t))
+        sp = pstep(sp, grad_fn, tensors, t * wps, jax.random.key(t))
+    assert _tree_err(sd.x, sp.x) < 1e-5
+    assert _tree_err(sd.res[0], sp.res[0]) < 1e-5
+    assert sd.res[1] is not None  # tracker stream carries its own residual
+
+
+def test_fused_quantized_consensus_matches_generic_mixer():
+    """dist.collectives.fused_quantized_consensus (the Pallas window) ==
+    core.compress.make_compressed_mixer over the same per-round mixer, on a
+    ragged pytree whose leaves need group padding."""
+    n, R = 8, 3
+    cfg = compress.CompressionConfig(scheme="sign", group=8)
+    ws = _ws(n, R)
+    tree = {"a": jax.random.normal(jax.random.key(0), (n, 50)),
+            "b": jax.random.normal(jax.random.key(1), (n, 3, 5))}
+    res = jax.tree.map(jnp.zeros_like, tree)
+
+    cmix = compress.make_compressed_mixer(lambda idx, m: ws[idx] @ m, cfg)
+    want, wres = cmix(0, R, tree, res, None)
+    got, gres = coll.fused_quantized_consensus(ws, tree, res, cfg=cfg,
+                                               block_d=16)
+    assert _tree_err(want, got) < 1e-5
+    assert _tree_err(wres, gres) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# 4. Engine semantics: warmup gate, EF off, residual lifecycle
+# ---------------------------------------------------------------------------
+
+def test_warmup_equals_uncompressed_until_activation():
+    from test_engine import ToyModel, _toy_batch
+
+    model = ToyModel()
+    n, R, warmup = 8, 2, 3
+    cfg = compress.CompressionConfig(scheme="sign", group=4, warmup=warmup)
+    Ws = jnp.asarray(_ws(n, 4))
+    batch0 = _toy_batch(n, R, 3, model.d, seed=0)
+    batch1 = _toy_batch(n, R, 3, model.d, seed=1)
+
+    def make(comp):
+        init, warm, step = dsteps.make_train_step(
+            model, None, algo="mc_dsgt", gamma=0.1, R=R, compression=comp)
+        return warm(init(jax.random.key(0), n, jnp.float32), batch0), \
+            jax.jit(step)
+
+    sc, cstep = make(cfg)
+    sp, pstep = make(None)
+    for k in range(warmup + 1):
+        sc, _ = cstep(sc, batch1, Ws)
+        sp, _ = pstep(sp, batch1, Ws)
+        if k < warmup:  # still warming up: identical to plain, zero residual
+            assert _tree_err(sc.x, sp.x) == 0.0
+            assert float(sum(jnp.sum(jnp.abs(l))
+                             for l in jax.tree.leaves(sc.res[0]))) == 0.0
+        else:  # the scheme activated exactly at k == warmup
+            assert _tree_err(sc.x, sp.x) > 0.0
+            assert float(sum(jnp.sum(jnp.abs(l))
+                             for l in jax.tree.leaves(sc.res[0]))) > 0.0
+
+
+def test_error_feedback_off_keeps_residual_zero():
+    n, D, R = 8, 64, 2
+    ws = _ws(n, R)
+    x = jax.random.normal(jax.random.key(0), (n, D))
+    out, res = ref.quantized_gossip_mix_ref(ws, x, jnp.zeros_like(x),
+                                            scheme="sign", group=8,
+                                            error_feedback=False)
+    np.testing.assert_array_equal(np.asarray(res), 0.0)
+    # and EF genuinely changes the mixed output given a nonzero residual
+    out_ef, res_ef = ref.quantized_gossip_mix_ref(
+        ws, x, jnp.zeros_like(x), scheme="sign", group=8,
+        error_feedback=True)
+    assert float(jnp.abs(res_ef).max()) > 0.0
+
+
+def test_engine_requires_cmix_and_residuals():
+    cfg = compress.CompressionConfig(scheme="sign")
+    rule = engine.make_rule("dsgd", gamma=0.1, compression=cfg)
+    x0 = {"w": jnp.ones((4, 8))}
+    st_ok = engine.init_state(rule, x0)
+    assert st_ok.res is not None
+    ops_nocmix = engine.EngineOps(
+        mix=lambda off, r, t: t, grad=lambda x: (None, x),
+        local_update=lambda g, s: (g, s), cast_aux=lambda t: t)
+    with pytest.raises(ValueError):
+        engine.step(rule, st_ok, ops_nocmix)
+
+
+# ---------------------------------------------------------------------------
+# 5. Spec / registry / bytes telemetry
+# ---------------------------------------------------------------------------
+
+def test_spec_compression_roundtrip_and_registry():
+    from repro import exp
+
+    spec = exp.from_dict({"compression": {"scheme": "int8", "group": 128,
+                                          "warmup": 5,
+                                          "error_feedback": False}})
+    assert exp.from_json(exp.to_json(spec)) == spec
+    cfg = exp.build_compression(spec.compression)
+    assert cfg == compress.CompressionConfig(
+        scheme="int8", error_feedback=False, warmup=5, group=128)
+    assert exp.build_compression(exp.CompressionSpec()) is None
+    with pytest.raises(KeyError):
+        exp.from_dict({"compression": {"codec": "sign"}})
+    with pytest.raises(ValueError):
+        exp.build(exp.from_dict({"compression": {"scheme": "fp4"}}))
+
+
+def test_telemetry_bytes_accounting():
+    """bytes/bytes_total count active senders per realized round at the
+    scheme's wire format — full f32 during warmup, compressed after — and
+    accumulate across every step regardless of the log cadence."""
+    from repro.core import topology
+    from repro.sim.telemetry import TelemetryRecorder
+
+    n, d, wps = 4, 32, 1
+    # federated(local_steps=2): rounds 0,1 empty; round 2 complete (n
+    # senders); period 3.  warmup=3 puts the first complete round (step 2)
+    # at full precision and the second (step 5) under the scheme.
+    sched = gossip.schedule_from_topology(topology.federated_schedule(n, 2))
+    cfg = compress.CompressionConfig(scheme="sign", group=8, warmup=3)
+
+    class _S:
+        x = jnp.ones((n, d))
+
+    tl = TelemetryRecorder(sched, wps=wps, every=2, compression=cfg)
+    full = compress.payload_bytes(d, "none")
+    comp = compress.payload_bytes(d, "sign", 8)
+    got = []
+    for k in range(6):
+        entry = tl.record(k, (k + 1) * wps, _S(), None, 0.0)
+        if k % 2 == 0:  # log cadence gates the entry, not the accounting
+            assert entry is not None and "bytes" in entry \
+                and entry["bytes_total"] == tl.bytes_total
+        got.append(None if entry is None else entry["bytes"])
+    assert got[0] == 0 and got[4] == 0  # empty local rounds send nothing
+    assert got[2] == n * full           # complete round inside warmup
+    assert tl.bytes_total == n * (full + comp)
+    uncompressed = TelemetryRecorder(sched, wps=wps, every=1,
+                                     compression=None)
+    for k in range(6):
+        uncompressed.record(k, (k + 1) * wps, _S(), None, 0.0)
+    assert uncompressed.bytes_total == n * full * 2
+    assert uncompressed.bytes_total > tl.bytes_total
+
+
+def test_manifest_reports_bytes_per_round_for_every_scheme():
+    from repro import exp
+
+    for scheme in ("none", "sign", "int8"):
+        spec = exp.from_dict({
+            "model": {"kind": "logreg", "d": 64, "m": 8},
+            "compression": ({"scheme": scheme} if scheme != "none" else {}),
+            "run": {"steps": 1, "nodes": 4}})
+        built = exp.build(spec)
+        rc = built.realized["compression"]
+        assert rc["scheme"] == scheme
+        assert rc["state_dim"] == 64
+        assert rc["baseline_bytes_per_round"] == 4 * 64
+        want = compress.payload_bytes(64, scheme, 256)
+        assert rc["bytes_per_round"] == want
+        if scheme == "none":
+            assert rc["bytes_per_round"] == rc["baseline_bytes_per_round"]
