@@ -26,6 +26,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
   sim_*              — repro.sim wireless data path: mobility schedule
       resampling, channel degradation + weight repair, and gossip-plan
       restaging of the realized window; writes BENCH_sim.json.
+  async_*            — overlapped gossip (ISSUE 8): step time with the
+      stale-window double buffer on/off plus the jaxpr overlap proof,
+      and delay ∈ {0,1,2} convergence on the Figure-2 scenario; writes
+      BENCH_async.json.
   obs_*              — repro.obs measurement cost: in-jit metrics +
       recorder flushing vs the bare step (< 5% contract), and the
       telemetry per-round cache speedup; writes BENCH_obs.json.
@@ -582,6 +586,90 @@ def bench_engine_step(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Async overlapped gossip (stale-window delay)
+# ---------------------------------------------------------------------------
+
+def bench_async(quick: bool) -> None:
+    """The overlapped-gossip runtime (stale-window delay).  Two row groups:
+
+    ``async_step_*`` — steady-state step time of the distributed train
+        step on the BENCH_engine LM scenario (reduced qwen, 4 nodes, sun
+        schedule): dsgd and mc_dsgt synchronous, then mc_dsgt with
+        ``delay=1`` (the double-buffered overlap path).  Each delayed row's
+        derived carries the :func:`repro.obs.overlap_report` verdict —
+        the jaxpr-level proof that no obs_mix op consumes an obs_grad
+        output — and ``async_overlap_ratio`` reports the headline
+        mc_dsgt(delay=1)/dsgd ratio (contract: <= 1.3 with overlap on;
+        note XLA:CPU schedules conservatively, so the wall-clock win is
+        a TPU property — the ratio row still tracks the trend and the
+        overlap_ok flag is backend-independent).
+    ``async_converge_delay{0,1,2}`` — the Figure-2 scenario (non-convex
+        logistic regression, Dirichlet-heterogeneous data, random sun
+        graphs, mc_dsgt R=2): final loss under each staleness window.
+        derived = final loss and ``delta_frac``, the |final - sync final|
+        as a fraction of the synchronous run's total descent (contract:
+        <= 2%).  Fixed length by design — staleness x step-size trades
+        off like momentum, so the comparison is at a matched budget.
+    Writes experiments/bench/BENCH_async.json."""
+    from repro import exp
+    from repro.dist import steps as dsteps
+    from repro.obs import overlap_report
+
+    n = 4
+    lm = exp.ExperimentSpec(
+        data=exp.DataSpec(batch=1, seq=16, active_vocab=16),
+        topology=exp.TopologySpec(kind="sun", beta=0.5),
+        run=exp.RunSpec(nodes=n))
+    w = BenchWriter()
+    times, reps = {}, {}
+    for algo, delay in [("dsgd", 0), ("mc_dsgt", 0), ("mc_dsgt", 1)]:
+        spec = exp.with_overrides(lm, {
+            "algorithm.name": algo, "algorithm.delay": delay,
+            "algorithm.R": 2 if algo == "mc_dsgt" else 1})
+        b = exp.build(spec)
+        init_s, warm, step = dsteps.make_train_step(
+            b.model, b.cfg, algo=algo, gamma=spec.algorithm.gamma,
+            R=b.rule.R, delay=delay)
+        state = warm(init_s(jax.random.key(spec.run.seed), n, jnp.float32),
+                     b.stream.batch_at(0))
+        W = jnp.asarray(b.schedule.stacked(0, b.wps))
+        batch = b.stream.batch_at(1)
+        us, _ = _timed(jax.jit(step), state, batch, W)
+        rep = overlap_report(step, state, batch, W)  # un-jitted: real eqns
+        times[(algo, delay)] = us
+        reps[(algo, delay)] = rep
+        w.row(f"async_step_{algo}_delay{delay}", us,
+              f"steps_per_s={1e6 / max(us, 1e-9):.1f}"
+              f"|overlap_ok={rep['overlapped']}", spec=spec)
+    ratio = times[("mc_dsgt", 1)] / max(times[("dsgd", 0)], 1e-9)
+    w.row("async_overlap_ratio", times[("mc_dsgt", 1)],
+          f"ratio_vs_dsgd={ratio:.2f}|target=1.3"
+          f"|overlap_ok={reps[('mc_dsgt', 1)]['overlapped']}")
+
+    steps_c, gamma = (40, 0.05) if quick else (60, 0.05)
+    base_spec = exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=16, m=256),
+        data=exp.DataSpec(batch=8, hetero_alpha=0.5),
+        algorithm=exp.AlgorithmSpec(name="mc_dsgt", gamma=gamma, R=2),
+        topology=exp.TopologySpec(kind="random-sun"),
+        run=exp.RunSpec(steps=steps_c, nodes=8))
+    finals = {}
+    for delay in (0, 1, 2):
+        spec = exp.with_field(base_spec, "algorithm.delay", delay)
+        t0 = time.time()
+        hist = exp.run(spec, quiet=True).history
+        us = (time.time() - t0) * 1e6 / steps_c
+        init, final = float(hist[0][1]), float(hist[-1][1])
+        finals[delay] = (init, final)
+        descent = max(finals[0][0] - finals[0][1], 1e-12)
+        delta = abs(final - finals[0][1]) / descent
+        w.row(f"async_converge_delay{delay}", us,
+              f"final={final:.5f}|delta_frac={delta:.4f}|target=0.02",
+              spec=spec)
+    w.dump("experiments/bench/BENCH_async.json")
+
+
+# ---------------------------------------------------------------------------
 # Observability overhead (repro.obs)
 # ---------------------------------------------------------------------------
 
@@ -761,6 +849,7 @@ BENCHES = [
     ("gossip_plan", bench_gossip_plan),
     ("sim", bench_sim),
     ("engine_step", bench_engine_step),
+    ("async", bench_async),
     ("obs", bench_obs),
     ("kernels", bench_kernels),
     ("theorem4", bench_theorem4),

@@ -130,6 +130,30 @@ def complete_mix(avg_weight, tree: PyTree) -> PyTree:
     return jax.tree.map(_m, tree)
 
 
+def two_level_mix(B: jax.Array, pods: int, tree: PyTree) -> PyTree:
+    """Hierarchical gossip for rounds that factor across pod boundaries,
+    W = B ⊗ J_p with J_p = 11^T/p the intra-pod average and B the (m, m)
+    doubly-stochastic inter-pod exchange (m = n/p pods of p nodes each,
+    pod-major node order — matching the ``pod|data|model`` mesh layout).
+
+    The lowering composes the two levels instead of the dense einsum:
+    intra-pod mean (ONE all-reduce of one parameter volume per pod over
+    the pod-local mesh axis under GSPMD), the tiny (m, m) inter-pod
+    exchange on pod means (a matching/sun-style peer exchange when B is
+    structured — m is small, so the einsum volume is m·V/p of the dense
+    n·V), then broadcast back within each pod.  Exactly equal to
+    ``mix(kron(B, J_p), tree)``."""
+    def _m(x):
+        n = x.shape[0]
+        m = n // pods
+        xp = x.reshape((m, pods) + x.shape[1:])
+        pod_mean = jnp.mean(xp, axis=1)
+        mixed = jnp.einsum("ij,j...->i...", B.astype(x.dtype), pod_mean)
+        out = jnp.broadcast_to(mixed[:, None], xp.shape)
+        return out.reshape(x.shape)
+    return jax.tree.map(_m, tree)
+
+
 def one_peer_mix_ppermute(perm: list, w_peer: float, tree: PyTree,
                           mesh, axis: str = "data") -> PyTree:
     """shard_map + lax.ppermute form of :func:`one_peer_mix` — the explicit
@@ -206,7 +230,10 @@ def make_plan_mixer(plan, *, mesh=None, axis: str = "data", mode: str | None = N
             return tree
         if kind == "dense":
             return _dense_mc(jnp.take(tensors["W"], idxs, axis=0), tree)
-        if kind == "sun":
+        if kind == "two_level":
+            xs = jnp.take(tensors["pod_B"], idxs, axis=0)
+            body = lambda z, B: (two_level_mix(B, plan.pods, z), None)
+        elif kind == "sun":
             xs = (jnp.take(tensors["center_mask"], idxs, axis=0),
                   jnp.take(tensors["delta"], idxs, axis=0))
             body = lambda z, md: (sun_mix(md[0], md[1], z), None)
@@ -282,6 +309,7 @@ class AlgoState(NamedTuple):
     opt_state: Any
     k: jax.Array         # round counter
     res: Optional[tuple] = None  # compressed-gossip EF residuals (x, h)
+    buf: Optional[tuple] = None  # stale-payload queues (x, h) when delay>0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -325,10 +353,10 @@ def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm
 
     def _to_engine(s: AlgoState) -> engine.EngineState:
         return engine.EngineState(s.x, s.h, s.g_prev, s.opt_state, s.k,
-                                  s.res)
+                                  s.res, s.buf)
 
     def _to_algo(s: engine.EngineState) -> AlgoState:
-        return AlgoState(s.x, s.h, s.g_prev, s.opt, s.k, s.res)
+        return AlgoState(s.x, s.h, s.g_prev, s.opt, s.k, s.res, s.buf)
 
     def init(x0: PyTree) -> AlgoState:
         return _to_algo(engine.init_state(
@@ -387,8 +415,8 @@ def plan_step(algo: DecentralizedAlgorithm, plan, *, mesh=None,
             cmix=cmix)
         es, aux = engine.step(rule, engine.EngineState(
             state.x, state.h, state.g_prev, state.opt_state, state.k,
-            state.res), ops, obs=obs)
-        new = AlgoState(es.x, es.h, es.g_prev, es.opt, es.k, es.res)
+            state.res, state.buf), ops, obs=obs)
+        new = AlgoState(es.x, es.h, es.g_prev, es.opt, es.k, es.res, es.buf)
         return (new, aux[1]) if obs else new
 
     pstep.dispatch = mixer.dispatch

@@ -149,7 +149,11 @@ class EngineState(NamedTuple):
     ``res`` is the compressed-gossip error-feedback state: an
     ``(res_x, res_h)`` pair of per-node residual trees (``res_h`` None for
     rules without a tracker stream), or None when the rule carries no
-    compression."""
+    compression.  ``buf`` is the stale-window double buffer for overlapped
+    gossip (``rule.delay > 0``): a ``(buf_x, buf_h)`` pair of FIFO queues —
+    each a tuple of ``delay`` payload trees, oldest first — holding the
+    pre-mix payloads of the last ``delay`` steps; None when ``delay=0`` so
+    the synchronous state layout (and its checkpoints) is unchanged."""
 
     x: PyTree
     h: Optional[PyTree]
@@ -157,6 +161,7 @@ class EngineState(NamedTuple):
     opt: Any
     k: jax.Array
     res: Optional[Tuple] = None
+    buf: Optional[Tuple] = None
 
 
 class EngineOps(NamedTuple):
@@ -219,6 +224,25 @@ class UpdateRule:
         gossip payload (the x stream and, for tracking rules, the h
         stream) is quantized per round with per-node error-feedback
         residuals carried in ``EngineState.res``.  None = full precision.
+    delay
+        Stale-window (overlapped) gossip.  ``delay=0`` is today's
+        synchronous path, bit-exact (the delayed wrapper is never built).
+        ``delay=d>0`` applies each step's gossip window to the payload
+        from ``d`` steps ago and folds the *correction* into the fresh
+        payload: ``out = payload + (Mix(stale) − stale)``.  Because the
+        correction depends only on state that existed ``d`` steps earlier,
+        the mix carries no data dependence on the current gradient and XLA
+        is free to schedule the collectives concurrently with the grad
+        computation (``obs_mix`` no longer serializes after ``obs_grad``).
+        Doubly-stochastic windows keep the node mean invariant, so the
+        tracking invariant h̄ = ḡ survives any delay.
+    comm_interval
+        Mix every ``k`` driver steps, pure local updates in between (the
+        federated pattern, but as a runtime knob instead of a schedule
+        property).  Skipped steps apply the identity mix — under
+        ``delay>0`` they contribute a zero correction while the stale
+        buffers keep advancing, so ``delay`` always counts steps, not
+        mixes.  ``comm_interval=1`` is today's path, bit-exact.
     """
 
     name: str
@@ -231,12 +255,24 @@ class UpdateRule:
     tracker_init: str = "mean"
     supports_local_opt: bool = True
     compression: Optional[compress.CompressionConfig] = None
+    delay: int = 0
+    comm_interval: int = 1
 
     def __post_init__(self):
         if self.kind not in ("sgd", "tracking", "difference"):
             raise ValueError(f"unknown rule kind {self.kind!r}")
         if self.kind == "difference" and self.R != 1:
             raise ValueError("difference rules take one oracle sample/step")
+        if self.delay < 0:
+            raise ValueError(f"delay must be >= 0, got {self.delay}")
+        if self.comm_interval < 1:
+            raise ValueError(
+                f"comm_interval must be >= 1, got {self.comm_interval}")
+        if self.comm_interval > 1 and self.compression is not None:
+            raise ValueError(
+                "comm_interval > 1 cannot be combined with gossip "
+                "compression (the error-feedback residual update cannot "
+                "be gated per step); run one or the other")
 
     @property
     def weights_per_step(self) -> int:
@@ -259,8 +295,8 @@ class UpdateRule:
 # The one registry.  Adding an algorithm = adding a line here (or a factory
 # below when it takes parameters beyond gamma/R).
 def make_rule(name: str, gamma: float, R: int = 1,
-              compression: Optional[compress.CompressionConfig] = None
-              ) -> UpdateRule:
+              compression: Optional[compress.CompressionConfig] = None,
+              delay: int = 0, comm_interval: int = 1) -> UpdateRule:
     specs = {
         "dsgd": dict(kind="sgd"),
         "local_sgd": dict(kind="sgd", mix_before_update=True),
@@ -276,7 +312,8 @@ def make_rule(name: str, gamma: float, R: int = 1,
     if name in ("dsgt", "d2") and R != 1:
         raise ValueError(f"{name} uses R=1 (MC-DSGT is the R-round variant)")
     return UpdateRule(name=name, gamma=gamma, R=(1 if name == "d2" else R),
-                      compression=compression, **specs[name])
+                      compression=compression, delay=delay,
+                      comm_interval=comm_interval, **specs[name])
 
 
 ALGORITHMS = ("dsgd", "local_sgd", "dsgt", "mc_dsgt", "gt_local", "d2")
@@ -340,6 +377,58 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
         mix_h = lambda off, r, tree: _cmix(1, off, r, tree)
         new_res = lambda: tuple(_res)
 
+    # comm_interval: gate the step's gossip window on the step counter —
+    # skipped steps apply the identity mix (a pure local update, the
+    # federated cadence as a runtime knob).  The gate sits INSIDE the delay
+    # wrapper below, so skipped steps contribute a zero correction while
+    # the stale buffers keep advancing: ``delay`` counts steps, not mixes.
+    if rule.comm_interval > 1:
+        mix_on = (state.k % rule.comm_interval) == 0
+
+        def _gated(base):
+            def gated(off, r, tree):
+                return jax.lax.cond(mix_on, lambda tr: base(off, r, tr),
+                                    lambda tr: tr, tree)
+            return gated
+
+        mix_x, mix_h = _gated(mix_x), _gated(mix_h)
+
+    # Stale-window double buffer: mix the payload from ``delay`` steps ago
+    # and fold only the *correction* into the fresh payload,
+    # ``out = payload + (Mix(stale) − stale)``.  The mix then has no data
+    # dependence on anything computed this step, so XLA may overlap the
+    # gossip collectives with the gradient work (the double-buffered
+    # runtime of the ROADMAP item).  Doubly-stochastic windows leave the
+    # node mean of the correction at zero, so x̄ evolves exactly as in the
+    # synchronous path and the tracking invariant h̄ = ḡ is preserved.
+    # ``_buf`` mirrors the ``_res`` pattern: trace-time mutation of the
+    # FIFO queues, purely functional in the traced graph.
+    if rule.delay:
+        if state.buf is None:
+            raise ValueError("delay > 0 needs stale-payload buffers: "
+                             "init_state materializes EngineState.buf")
+        _buf = [None if q is None else list(q) for q in state.buf]
+        _store = ((lambda t: t), ops.cast_aux)   # per-stream storage cast
+
+        def _delayed(slot, base):
+            def delayed(off, r, tree):
+                q = _buf[slot]
+                stale = q[0]
+                mixed = base(off, r, stale)
+                out = jax.tree.map(
+                    lambda t, m, s: (t.astype(jnp.float32)
+                                     + m.astype(jnp.float32)
+                                     - s.astype(jnp.float32)).astype(t.dtype),
+                    tree, mixed, stale)
+                _buf[slot] = q[1:] + [_store[slot](tree)]
+                return out
+            return delayed
+
+        mix_x, mix_h = _delayed(0, mix_x), _delayed(1, mix_h)
+        new_buf = lambda: tuple(None if q is None else tuple(q) for q in _buf)
+    else:
+        new_buf = lambda: state.buf
+
     def out(metrics, *, g, x, pre_mix, post_mix, h=None):
         if not obs:
             return metrics
@@ -360,7 +449,7 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
             x = mix_x(0, rule.weights_per_step, z)
             aux = out(metrics, g=g, x=x, pre_mix=z, post_mix=x)
         return state._replace(x=x, opt=opt, k=state.k + 1,
-                              res=new_res()), aux
+                              res=new_res(), buf=new_buf()), aux
 
     if rule.kind == "difference":
         if state.g_prev is None:
@@ -375,7 +464,7 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
         # x^{k-1} rides in the h slot, uncast to keep the difference exact
         return EngineState(x=x, h=state.x, g_prev=ops.cast_aux(g),
                            opt=state.opt, k=state.k + 1,
-                           res=new_res()), aux
+                           res=new_res(), buf=new_buf()), aux
 
     # tracking
     if state.h is None:
@@ -397,7 +486,8 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
         h = _tracker_delta(mix_h(h_off, R, state.h), g, state.g_prev)
     aux = out(metrics, g=g, x=x, pre_mix=pre, post_mix=post, h=h)
     return EngineState(x=x, h=ops.cast_aux(h), g_prev=ops.cast_aux(g),
-                       opt=opt, k=state.k + 1, res=new_res()), aux
+                       opt=opt, k=state.k + 1, res=new_res(),
+                       buf=new_buf()), aux
 
 
 def warm_start(rule: UpdateRule, state: EngineState,
@@ -422,7 +512,13 @@ def warm_start(rule: UpdateRule, state: EngineState,
                                        g.shape), g0)
     else:
         h0 = g0
-    return state._replace(h=ops.cast_aux(h0), g_prev=ops.cast_aux(g0))
+    state = state._replace(h=ops.cast_aux(h0), g_prev=ops.cast_aux(g0))
+    if rule.delay and state.buf is not None:
+        # Seed the tracker-stream stale queue with the warm-start payload
+        # (h⁰ is the natural t<0 tracker payload: h₋₁ + g₀ − g₋₁ = h⁰).
+        state = state._replace(
+            buf=(state.buf[0], tuple(state.h for _ in range(rule.delay))))
+    return state
 
 
 def init_state(rule: UpdateRule, x0: PyTree, *, opt_init=None,
@@ -437,5 +533,16 @@ def init_state(rule: UpdateRule, x0: PyTree, *, opt_init=None,
     mk = (lambda: aux_init(x0)) if aux_init is not None else (lambda: None)
     res = (compress.init_residual(x0, rule.uses_tracker, dtype=res_dtype)
            if rule.compression is not None else None)
+    buf = None
+    if rule.delay:
+        # Stale-payload FIFO queues (oldest first).  The x stream seeds with
+        # x⁰ — with broadcast-identical init, Mix(x⁰) − x⁰ = 0, so the first
+        # ``delay`` steps see a zero correction: exactly the overlapped-
+        # communication semantics where round t's results land at t+delay.
+        # The tracker stream starts as zeros/None and is re-seeded with the
+        # warm-start payload by :func:`warm_start`.
+        hq = (tuple(mk() for _ in range(rule.delay))
+              if rule.uses_tracker else None)
+        buf = (tuple(x0 for _ in range(rule.delay)), hq)
     return EngineState(x=x0, h=mk(), g_prev=mk(), opt=opt,
-                       k=jnp.zeros((), jnp.int32), res=res)
+                       k=jnp.zeros((), jnp.int32), res=res, buf=buf)

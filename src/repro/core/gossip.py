@@ -100,6 +100,9 @@ class GossipRound:
     * ``matching``  — :func:`one_peer_mix`: z_i = (1-w_i) x_i + w_i x_{perm(i)};
     * ``sun``       — :func:`sun_mix` with W = I - (delta/n) L(S_{n,C});
     * ``complete``  — :func:`complete_mix`: z = (1-a) x + a x̄;
+    * ``two_level`` — :func:`two_level_mix`: W = B ⊗ J_p factors into an
+      intra-pod average (p nodes/pod, one allreduce per pod) composed with
+      the (m, m) inter-pod exchange ``pod_B`` on pod means;
     * ``dense``     — generic mix(W, ·) einsum.
     """
 
@@ -110,6 +113,8 @@ class GossipRound:
     perm: np.ndarray | None = None             # (n,) int32, matching/empty
     w_peer: np.ndarray | None = None           # (n,) float32, matching/empty
     avg_weight: float | None = None            # complete: z = (1-a) x + a x̄
+    pod_B: np.ndarray | None = None            # (m, m) inter-pod, two_level
+    pods: int | None = None                    # p = nodes per pod, two_level
 
     @property
     def n(self) -> int:
@@ -131,12 +136,16 @@ class GossipRound:
         if self.kind == "sun":
             adj = topo.sun_shaped_graph(n, np.flatnonzero(self.center_mask))
             return laplacian_weights(adj, self.delta / n)
+        if self.kind == "two_level":
+            p = self.pods
+            return np.kron(np.asarray(self.pod_B, np.float64),
+                           np.ones((p, p)) / p)
         return np.asarray(self.W, np.float64)
 
 
 def plan_round(W: WeightMatrix,
                structure: "topo.RoundStructure | None" = None,
-               atol: float = 1e-9) -> GossipRound:
+               atol: float = 1e-9, pods: int | None = None) -> GossipRound:
     """Lower one weight matrix to its cheapest structured form.
 
     ``structure`` is the topology-level tag when the schedule declares one;
@@ -144,6 +153,12 @@ def plan_round(W: WeightMatrix,
     parameters are extracted from ``W`` and accepted only if they reproduce
     ``W`` exactly (within ``atol``); any mismatch — e.g. non-uniform weights
     on a sun graph — falls back to the always-correct dense lowering.
+
+    ``pods`` (p nodes per pod, pod-major order — the ``pod|data|model``
+    mesh layout) enables the hierarchical fallback: a round none of the
+    flat lowerings accept is tested for the two-level factorization
+    W = B ⊗ J_p and, when it factors exactly across pod boundaries,
+    lowered to ``two_level`` instead of dense.
     """
     W = np.asarray(W, np.float64)
     n = W.shape[0]
@@ -183,6 +198,12 @@ def plan_round(W: WeightMatrix,
         probe = rim[0] if rim.size else 1  # any edge weight; all must agree
         delta = float(W[probe, center[0]] * n)
         rd = _accept(GossipRound("sun", W, center_mask=mask, delta=delta))
+    if rd is None and pods is not None and 1 < pods < n and n % pods == 0:
+        # hierarchical fallback: does the round factor as B ⊗ J_p?  Each
+        # p×p block of W must be constant (= B[I,J]/p); the block means
+        # give the candidate B and _accept checks the exact kron.
+        B = W.reshape(n // pods, pods, n // pods, pods).mean(axis=(1, 3)) * pods
+        rd = _accept(GossipRound("two_level", W, pod_B=B, pods=pods))
     return rd if rd is not None else GossipRound("dense", W)
 
 
@@ -209,6 +230,18 @@ class GossipPlan:
     @property
     def kinds(self) -> tuple:
         return tuple(r.kind for r in self.rounds)
+
+    @property
+    def pods(self) -> int | None:
+        """Pod size p shared by the plan's ``two_level`` rounds (None when
+        the plan has none).  Mixed pod sizes in one plan are rejected —
+        the mixer bakes p in statically."""
+        ps = {r.pods for r in self.rounds if r.kind == "two_level"}
+        if not ps:
+            return None
+        if len(ps) != 1:
+            raise ValueError(f"two_level rounds disagree on pod size: {ps}")
+        return ps.pop()
 
     @property
     def dispatch(self) -> str:
@@ -244,6 +277,11 @@ class GossipPlan:
             out["avg_w"] = np.asarray(
                 [r.avg_weight if r.kind == "complete" else 0.0
                  for r in self.rounds], np.float32)
+        if "two_level" in kinds:
+            m = n // self.pods
+            out["pod_B"] = np.stack(
+                [r.pod_B if r.kind == "two_level" else np.eye(m)
+                 for r in self.rounds]).astype(np.float32)
         return out
 
     def validate(self) -> None:
@@ -296,14 +334,16 @@ class WeightSchedule:
         return np.stack([self(t0 + r) for r in range(rounds)]).astype(dtype)
 
     def plan(self, t0: int = 0, rounds: int | None = None,
-             validate: bool = True) -> GossipPlan:
+             validate: bool = True, pods: int | None = None) -> GossipPlan:
         """Lower rounds [t0, t0+rounds) (default: one full period) to a
         :class:`GossipPlan`; with ``validate`` each structured lowering is
         checked against its dense matrix via :func:`check_assumption3` and
-        exact reconstruction."""
+        exact reconstruction.  ``pods`` enables the hierarchical two-level
+        lowering for rounds that factor across pod boundaries (see
+        :func:`plan_round`)."""
         rounds = self.period if rounds is None else rounds
         plan = GossipPlan(tuple(
-            plan_round(self(t0 + r), self.structure(t0 + r))
+            plan_round(self(t0 + r), self.structure(t0 + r), pods=pods)
             for r in range(rounds)))
         if validate:
             plan.validate()

@@ -60,6 +60,7 @@ class TrainState(NamedTuple):
     step: jax.Array            # round counter
     opt: Any = None            # local-optimizer state (framework extension)
     res: Any = None            # compressed-gossip EF residuals (x, h)
+    buf: Any = None            # stale-payload queues (x, h) when delay>0
 
 
 def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
@@ -69,7 +70,8 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
                     pallas_block_d: int = 1024, pallas_interpret="auto",
                     plan=None, mesh=None, gossip_axis: str = "data",
                     auto_dense: str = "einsum", obs: tuple = (),
-                    compression: Optional[compress.CompressionConfig] = None):
+                    compression: Optional[compress.CompressionConfig] = None,
+                    delay: int = 0, comm_interval: int = 1):
     """Build (init_state, warm_start, step) for one decentralized algorithm.
 
     gossip_impl: 'dense' (einsum multi-consensus), 'sun' (structured
@@ -100,10 +102,19 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
     :data:`repro.core.engine.OBS_METRICS`): when non-empty the step's
     output dict gains an ``"obs"`` entry of device scalars, computed by
     the shared engine — no extra host syncs.
+
+    ``delay`` > 0 enables the stale-window double buffer (overlapped
+    gossip): the step mixes the payload from ``delay`` steps ago and folds
+    the correction into the fresh payload, so the collectives carry no
+    data dependence on the current grad and XLA may run them concurrently
+    (see :class:`repro.core.engine.UpdateRule`).  ``comm_interval`` mixes
+    every k steps (identity mix in between).  Both default to today's
+    synchronous path, bit-exact.
     """
     rule = engine.make_rule(algo, gamma=gamma,
                             R=(1 if algo == "d2" else R),
-                            compression=compression)
+                            compression=compression, delay=delay,
+                            comm_interval=comm_interval)
     if gossip_impl not in ("dense", "sun", "pallas", "auto"):
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}")
     if gossip_impl == "sun" and sun_delta is None:
@@ -183,8 +194,17 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
         opt = local_opt.init(x) if local_opt is not None else None
         res = (compress.init_residual(x, rule.uses_tracker, dtype=aux_dtype)
                if compression is not None else None)
+        buf = None
+        if rule.delay:
+            # Stale-payload FIFO queues, mirroring engine.init_state: the x
+            # stream seeds with x⁰ (zero correction for the first ``delay``
+            # steps under broadcast-identical init); the tracker stream is
+            # re-seeded with h⁰ by warm_start.
+            hq = (tuple(aux for _ in range(rule.delay))
+                  if rule.uses_tracker else None)
+            buf = (tuple(x for _ in range(rule.delay)), hq)
         return TrainState(x=x, h=aux, g_prev=aux, step=jnp.zeros((), jnp.int32),
-                          opt=opt, res=res)
+                          opt=opt, res=res, buf=buf)
 
     # Bind the engine's abstract ops to this runtime: the selected gossip
     # mixer, the clipped R-microbatch oracle, the local-optimizer hook and
@@ -215,11 +235,11 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
 
     def _to_engine(s: TrainState) -> engine.EngineState:
         return engine.EngineState(s.x, s.h, s.g_prev, s.opt, s.step,
-                                  res=s.res)
+                                  res=s.res, buf=s.buf)
 
     def _to_train(s: engine.EngineState) -> TrainState:
         return TrainState(x=s.x, h=s.h, g_prev=s.g_prev, step=s.k, opt=s.opt,
-                          res=s.res)
+                          res=s.res, buf=s.buf)
 
     def warm_start(state: TrainState, batch) -> TrainState:
         ops = _ops(batch, None, 0)  # warm start never gossips

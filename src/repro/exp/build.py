@@ -140,6 +140,16 @@ def _validate(spec: ExperimentSpec) -> None:
     if m.kind not in registry.MODEL_KINDS:
         raise ValueError(f"model.kind={m.kind!r}: unknown "
                          f"(have {sorted(registry.MODEL_KINDS)})")
+    if a.delay < 0:
+        raise ValueError(f"algorithm.delay={a.delay}: must be >= 0")
+    if a.comm_interval < 1:
+        raise ValueError(f"algorithm.comm_interval={a.comm_interval}: "
+                         "must be >= 1")
+    if t.pods < 1:
+        raise ValueError(f"topology.pods={t.pods}: must be >= 1")
+    if t.pods > 1 and r.nodes % t.pods:
+        raise ValueError(f"topology.pods={t.pods} must divide "
+                         f"run.nodes={r.nodes}")
     if m.kind == "logreg":
         if r.gossip_impl == "pallas":
             raise ValueError("model.kind='logreg' runs the host runtime: "
@@ -178,7 +188,8 @@ def build(spec: ExperimentSpec) -> Built:
     # is defined at R=1 and the engine enforces it
     R = al.R if al.name == "mc_dsgt" else 1
     comp = registry.build_compression(spec.compression)
-    rule = engine.make_rule(al.name, gamma=al.gamma, R=R, compression=comp)
+    rule = engine.make_rule(al.name, gamma=al.gamma, R=R, compression=comp,
+                            delay=al.delay, comm_interval=al.comm_interval)
     wps = rule.weights_per_step
 
     # horizon only matters for the non-periodic schedules (resampled
@@ -194,13 +205,16 @@ def build(spec: ExperimentSpec) -> Built:
         # impls consume the same post-fault matrices
         sched = sim_faults.realize_weight_schedule(sched, fault_models,
                                                    rounds=horizon)
-    plan = sched.plan(0, sched.period) if rs.gossip_impl == "auto" else None
+    pods = spec.topology.pods if spec.topology.pods > 1 else None
+    plan = (sched.plan(0, sched.period, pods=pods)
+            if rs.gossip_impl == "auto" else None)
     telem = None
-    if fault_models or rs.telemetry or comp is not None or \
+    if fault_models or rs.telemetry or comp is not None or rule.delay or \
             spec.topology.kind in registry.MOBILITY_TOPOLOGIES:
         telem = sim_telemetry.TelemetryRecorder(sched, wps=wps,
                                                 every=rs.log_every,
-                                                compression=comp)
+                                                compression=comp,
+                                                delay=rule.delay)
     built = Built(spec=spec, rule=rule, wps=wps, horizon=horizon,
                   schedule=sched, plan=plan, fault_models=fault_models,
                   local_opt=registry.build_local_opt(al.local_opt),
@@ -351,6 +365,7 @@ def _run_arch(built: Built, *, quiet: bool = False) -> Result:
         gossip_impl=rs.gossip_impl, plan=built.plan,
         local_opt=built.local_opt,
         compression=built.rule.compression,
+        delay=built.rule.delay, comm_interval=built.rule.comm_interval,
         obs=built.obs_names)
 
     state = init_state(jax.random.key(rs.seed), rs.nodes, jnp.float32)

@@ -115,6 +115,44 @@ def _random_sun(s: TopologySpec, n: int, *, horizon=None, seed=0):
     return gossip.WeightSchedule(tuple(mats), tuple(structs))
 
 
+@register_topology("hierarchical")
+def _hierarchical(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    """Two-level pod schedule (the Bagua-style hierarchical pattern):
+    ``local_steps`` rounds of intra-pod averaging (W = I_m ⊗ J_p, one
+    allreduce per pod) followed by one inter-pod round where pods pair up
+    round-robin (W = B ⊗ J_p with B = ½I + ½P a matching over pod means).
+    Every round factors across pod boundaries, so with ``pods`` threaded
+    to the planner the whole plan lowers to ``two_level`` — dense
+    intra-pod psum composed with the matching inter-pod peer exchange.
+
+    ``pods`` is the pod size p (must divide n, pod-major node order);
+    with fewer than two pods the inter-pod round degenerates to the
+    global average."""
+    p = s.pods
+    if p < 1 or n % p:
+        raise ValueError(f"hierarchical topology needs pods | nodes, got "
+                         f"pods={p}, nodes={n}")
+    m = n // p
+    Jp = np.ones((p, p)) / p
+    intra = np.kron(np.eye(m), Jp)
+    mats, structs = [], []
+    if m > 1 and not (m & (m - 1)):
+        # hypercube matchings over pods: log2(m) distinct pairings/period
+        pod_sched = topo.one_peer_exponential_schedule(m)
+        inters = [0.5 * np.eye(m) + 0.5 * pod_sched(t).astype(float)
+                  * ~np.eye(m, dtype=bool) for t in range(pod_sched.period)]
+    else:
+        # non-power-of-two pod count: one global pod average per period
+        inters = [np.ones((m, m)) / m]
+    for B in inters:
+        for _ in range(max(0, s.local_steps)):
+            mats.append(intra)
+            structs.append(topo.classify_adjacency(intra > 0))
+        mats.append(np.kron(B, Jp))
+        structs.append(topo.classify_adjacency(mats[-1] > 0))
+    return gossip.WeightSchedule(tuple(mats), tuple(structs))
+
+
 MOBILITY_TOPOLOGIES = ("geometric-mobility", "waypoint-mobility")
 
 

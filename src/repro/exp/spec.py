@@ -36,7 +36,12 @@ class TopologySpec:
     mobility models), ``local_steps`` (federated: local rounds between
     averaging rounds), ``centers``/``resample_period`` (random-sun: |C| and
     the number of independent center draws materialized, the §6 Figure 2
-    protocol)."""
+    protocol), ``pods`` (nodes per pod, pod-major order — matching the
+    ``pod|data|model`` mesh layout; when > 1, rounds that factor as
+    B ⊗ J_p across pod boundaries take the hierarchical two-level lowering
+    under ``gossip_impl='auto'``, and the ``hierarchical`` family builds
+    such schedules: ``local_steps`` intra-pod averaging rounds then one
+    inter-pod matching round)."""
 
     kind: str = "sun"
     beta: float = 0.75
@@ -45,6 +50,7 @@ class TopologySpec:
     local_steps: int = 4
     centers: int = 1
     resample_period: int = 16
+    pods: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,12 +71,23 @@ class AlgorithmSpec:
     :data:`repro.exp.registry.ALGORITHMS` entry; ``R`` (consensus/
     accumulation rounds) only applies to ``mc_dsgt`` — every other rule is
     defined at R=1 and the builder normalizes; ``local_opt`` is a
-    :data:`repro.exp.registry.LOCAL_OPTS` key."""
+    :data:`repro.exp.registry.LOCAL_OPTS` key.
+
+    ``delay`` is the stale-window (overlapped-gossip) axis: each step's
+    gossip window is applied to the payload from ``delay`` steps ago and
+    only the correction is folded into the fresh payload, so the mix
+    collectives carry no data dependence on the current gradient (see
+    :class:`repro.core.engine.UpdateRule`); ``delay=0`` is today's
+    synchronous path, bit-exact.  ``comm_interval`` mixes every k driver
+    steps with pure local updates in between (identity mix on skipped
+    steps; incompatible with compression)."""
 
     name: str = "mc_dsgt"
     gamma: float = 0.05
     R: int = 2
     local_opt: str = "sgd"
+    delay: int = 0
+    comm_interval: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

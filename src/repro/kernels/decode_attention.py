@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -65,7 +67,7 @@ def _kernel(q_ref, k_ref, v_ref, kpos_ref, pos_ref, o_ref,
 
 
 def decode_attention(q, k, v, kpos, pos, *, window=0, block_k=256,
-                     interpret=False):
+                     interpret="auto"):
     """q: (B, 1, J, G, hd); k, v: (B, C, J, hd); kpos: (C,) int32 absolute
     positions (-1 = empty slot); pos: scalar int32 current position.
     Returns (B, 1, J*G, hd) — matches repro.models.attention.decode_attend.
@@ -100,6 +102,6 @@ def decode_attention(q, k, v, kpos, pos, *, window=0, block_k=256,
         ],
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q2, k, v, kpos, pos_arr)
     return out.reshape(B, 1, J * G, hd)

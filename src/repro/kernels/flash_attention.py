@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -70,7 +72,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
-                    block_k=128, interpret=False):
+                    block_k=128, interpret="auto"):
     """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with KV dividing H.
     Returns (B, Sq, H, hd)."""
     B, Sq, H, hd = q.shape
@@ -103,5 +105,5 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
         ],
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .interpret import resolve_interpret
+
 
 def _kernel(w_ref, x_ref, o_ref, *, rounds):
     w = w_ref[...]                # (R, n, n)
@@ -31,7 +33,7 @@ def _kernel(w_ref, x_ref, o_ref, *, rounds):
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-def gossip_mix(ws, x, *, block_d=1024, interpret=False):
+def gossip_mix(ws, x, *, block_d=1024, interpret="auto"):
     """ws: (R, n, n); x: (n, D) -> (n, D) after R chained mixings."""
     R, n, _ = ws.shape
     N, D = x.shape
@@ -50,5 +52,5 @@ def gossip_mix(ws, x, *, block_d=1024, interpret=False):
         out_shape=jax.ShapeDtypeStruct((n, D), x.dtype),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel",)),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(ws, x)

@@ -1,0 +1,24 @@
+"""The one Pallas interpret-mode policy.
+
+A leaf module (imports only jax) so both the raw kernel modules
+(:mod:`gossip_matmul`, :mod:`flash_attention`, ...) and the jitted public
+wrappers (:mod:`repro.kernels.ops`, which imports the kernels and therefore
+cannot be imported BY them) resolve the same policy: ``"auto"`` compiles on
+TPU backends and falls back to interpreter mode (Python evaluation of the
+kernel body) everywhere else, so the same call sites are correct on CPU CI
+and on real accelerators.  Booleans pass through for explicit overrides
+(tests, interpreter-mode debugging on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret) -> bool:
+    """``"auto"`` -> interpret unless the default backend is a TPU;
+    booleans pass through.  Resolved at trace time (the flag is a static
+    argument), so jitted callers specialize correctly."""
+    if interpret == "auto":
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .interpret import resolve_interpret
+
 
 def _kernel(a_ref, b_ref, h_all_ref, h_last_ref, h_ref, *, block_t, num_t):
     ti = pl.program_id(2)
@@ -45,7 +47,8 @@ def _kernel(a_ref, b_ref, h_all_ref, h_last_ref, h_ref, *, block_t, num_t):
         h_last_ref[0] = h.astype(h_last_ref.dtype)
 
 
-def linear_recurrence(a, b, *, block_t=128, block_c=512, interpret=False):
+def linear_recurrence(a, b, *, block_t=128, block_c=512,
+                      interpret="auto"):
     """a, b: (B, S, C) -> (h_all (B, S, C), h_last (B, C)).
 
     Zero initial state (callers fold h0 into b_0 if needed: b_0 += a_0*h0).
@@ -75,6 +78,6 @@ def linear_recurrence(a, b, *, block_t=128, block_c=512, interpret=False):
         scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)],
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, b)
     return h_all, h_last

@@ -21,17 +21,9 @@ from . import ref
 from .decode_attention import decode_attention as _decode
 from .flash_attention import flash_attention as _flash
 from .gossip_matmul import gossip_mix as _gossip
+from .interpret import resolve_interpret  # noqa: F401  (re-export: the API)
 from .linear_recurrence import linear_recurrence as _linrec
 from .quantized_gossip import quantized_gossip_mix as _qgossip
-
-
-def resolve_interpret(interpret) -> bool:
-    """The one interpret policy: ``"auto"`` -> interpret unless the default
-    backend is a TPU; booleans pass through.  Resolved at trace time (the
-    flag is a static argument), so jitted callers specialize correctly."""
-    if interpret == "auto":
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas",

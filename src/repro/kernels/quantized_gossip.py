@@ -33,6 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import ref
+from .interpret import resolve_interpret
 
 
 def _kernel(w_ref, x_ref, r_ref, o_ref, ro_ref, *, rounds, scheme, group,
@@ -59,7 +60,7 @@ def _kernel(w_ref, x_ref, r_ref, o_ref, ro_ref, *, rounds, scheme, group,
 
 
 def quantized_gossip_mix(ws, x, res, *, scheme, group=256,
-                         error_feedback=True, block_d=1024, interpret=False):
+                         error_feedback=True, block_d=1024, interpret="auto"):
     """ws: (R, n, n); x, res: (n, D) -> (mixed x, final residual).
 
     D must be a multiple of ``group`` (callers pad; zero columns are a
@@ -93,5 +94,5 @@ def quantized_gossip_mix(ws, x, res, *, scheme, group=256,
         ),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel",)),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(ws, x, res)

@@ -58,6 +58,9 @@ FLAG_TO_FIELD = {
     "er_p": "topology.er_p",
     "radius": "topology.radius",
     "local_steps": "topology.local_steps",
+    "pods": "topology.pods",
+    "delay": "algorithm.delay",
+    "comm_interval": "algorithm.comm_interval",
     "link_drop": "channel.link_drop",
     "burst_loss": "channel.burst_loss",
     "churn": "channel.churn",
@@ -120,6 +123,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--local-steps", type=int,
                     help="local-only rounds between averaging rounds for "
                          "--topology federated")
+    ap.add_argument("--pods", type=int,
+                    help="nodes per pod (pod-major order): rounds that "
+                         "factor as B ⊗ J_p across pod boundaries take the "
+                         "hierarchical two-level lowering under --gossip-impl "
+                         "auto; --topology hierarchical builds such schedules")
+    ap.add_argument("--delay", type=int,
+                    help="stale-window gossip: mix the payload from N steps "
+                         "ago and fold only the correction into the fresh "
+                         "payload, freeing XLA to overlap the collectives "
+                         "with the grad computation (0 = synchronous, "
+                         "bit-exact today's path)")
+    ap.add_argument("--comm-interval", type=int,
+                    help="mix every k driver steps, pure local updates in "
+                         "between (identity mix on skipped steps; "
+                         "incompatible with --compress)")
     ap.add_argument("--link-drop", type=float,
                     help="iid per-round per-link Bernoulli drop probability "
                          "(repro.sim channel degradation)")

@@ -30,8 +30,8 @@ def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None,
     a, b: (B, S, ...); h0: (B, ...) initial state (zeros if None).
     Returns (h_all (B, S, ...), h_last (B, ...)).
 
-    use_pallas routes through the linear_recurrence kernel (interpret mode
-    on CPU); non-zero h0 is folded into b_0 (b_0 += a_0 * h0).
+    use_pallas routes through the linear_recurrence kernel (compiled on
+    TPU, interpret mode elsewhere — resolve_interpret's "auto" policy); non-zero h0 is folded into b_0 (b_0 += a_0 * h0).
     """
     B, S = a.shape[:2]
     rest = a.shape[2:]
@@ -47,8 +47,7 @@ def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None,
         bf = bf.at[:, 0].add(af[:, 0] * h0.reshape(B, C).astype(jnp.float32))
         bt = min(128, S)
         if S % bt == 0 and C % min(512, C) == 0:
-            h_all, h_last = _lr(af, bf, block_t=bt, block_c=min(512, C),
-                                interpret=True)
+            h_all, h_last = _lr(af, bf, block_t=bt, block_c=min(512, C))
             return (h_all.reshape((B, S) + rest),
                     h_last.reshape((B,) + rest))
     c = min(chunk, S)

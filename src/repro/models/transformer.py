@@ -72,7 +72,7 @@ def _apply_attn_layer(p, x, cfg, rope, mode, cache, pos):
         if cfg.use_pallas:
             from ..kernels.decode_attention import decode_attention as _dk
             o = _dk(q, cache_new["k"], cache_new["v"], cache_new["kpos"],
-                    pos, window=cfg.window, interpret=True)
+                    pos, window=cfg.window)
         else:
             o = attn.decode_attend(q, cache_new, pos, window=cfg.window,
                                    softcap=cfg.logit_softcap)
@@ -89,8 +89,7 @@ def _apply_attn_layer(p, x, cfg, rope, mode, cache, pos):
         if cfg.use_pallas:
             from ..kernels.flash_attention import flash_attention as _fl
             of = _fl(qf, k, v, causal=True, window=cfg.window,
-                     block_q=min(128, S), block_k=min(128, S),
-                     interpret=True)
+                     block_q=min(128, S), block_k=min(128, S))
             o = of  # (B, S, H, hd) == flat layout expected below
         elif cfg.window and S > cfg.window:
             o = attn.attend_sliding_block(q, k, v, q_pos, window=cfg.window,

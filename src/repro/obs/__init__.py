@@ -42,4 +42,10 @@ from .metrics import (  # noqa: F401
     read_events,
 )
 from .optimality import GapTracker, cell_key, theoretical_floor  # noqa: F401
-from .trace import PHASES, Profiler, Tracer  # noqa: F401
+from .trace import (  # noqa: F401
+    PHASES,
+    Profiler,
+    Tracer,
+    mix_depends_on_grad,
+    overlap_report,
+)

@@ -9,6 +9,12 @@ timeline.  The grad/mix *sub*-phases live inside one fused jit and cannot
 be wall-clocked from the host; the engine tags them with
 ``jax.named_scope("obs_grad"/"obs_mix")`` instead, which the profiler
 trace (:class:`Profiler`, ``--profile-dir``) decomposes.
+
+:func:`overlap_report` reads those same tags out of a step's jaxpr to
+*prove* (or refute) overlap-eligibility: under stale-window gossip
+(``AlgorithmSpec.delay > 0``) no ``obs_mix`` operation may transitively
+consume an ``obs_grad`` output, so XLA's latency-hiding scheduler is free
+to run the gossip collectives concurrently with the grad computation.
 """
 
 from __future__ import annotations
@@ -18,6 +24,64 @@ import time
 import jax
 
 PHASES = ("data", "step", "telemetry", "checkpoint")
+
+
+# ---------------------------------------------------------------------------
+# Overlap verification: data-dependence between the obs_grad / obs_mix tags
+# ---------------------------------------------------------------------------
+
+def _eqn_scopes(eqn) -> str:
+    """The named_scope stack an equation was traced under, as a string
+    (e.g. ``'obs_mix/transpose[...]'``)."""
+    try:
+        return str(eqn.source_info.name_stack)
+    except AttributeError:  # very old jax: no name stacks — report nothing
+        return ""
+
+
+def mix_depends_on_grad(jaxpr) -> bool:
+    """Whether any ``obs_mix``-tagged equation of ``jaxpr`` transitively
+    consumes a value produced under ``obs_grad``.
+
+    Taint propagation over the (topologically ordered) equation list,
+    treating each equation atomically: an equation whose inputs carry
+    taint taints all its outputs.  Sub-jaxprs (scan/cond bodies) inherit
+    the outer equation's name stack, so outer-equation granularity is a
+    sound over-approximation.  False means the mix is data-independent of
+    the step's gradient — the XLA scheduler MAY overlap them (the
+    ``delay > 0`` contract); True means the mix serializes after the grad
+    (every synchronous rule, where the mix payload contains the fresh
+    update).
+    """
+    closed = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+    tainted: set = set()
+    for eqn in closed.eqns:
+        scopes = _eqn_scopes(eqn)
+        consumes = any(not isinstance(v, jax.core.Literal) and v in tainted
+                       for v in eqn.invars)
+        if "obs_mix" in scopes and consumes:
+            return True
+        if "obs_grad" in scopes or consumes:
+            tainted.update(eqn.outvars)
+    return False
+
+
+def overlap_report(fn, *args, **kwargs) -> dict:
+    """Trace ``fn(*args, **kwargs)`` (abstractly — nothing executes) and
+    report whether its gossip mix is overlap-eligible:
+
+    * ``overlapped``  — True when no ``obs_mix`` op transitively depends
+      on an ``obs_grad`` output (the stale-window double-buffer contract);
+    * ``mix_eqns`` / ``grad_eqns`` — tagged top-level equation counts
+      (0 for both means the function was not engine-annotated and the
+      verdict is vacuous).
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    closed = getattr(jaxpr, "jaxpr", jaxpr)
+    mix_eqns = sum(1 for e in closed.eqns if "obs_mix" in _eqn_scopes(e))
+    grad_eqns = sum(1 for e in closed.eqns if "obs_grad" in _eqn_scopes(e))
+    return {"overlapped": not mix_depends_on_grad(jaxpr),
+            "mix_eqns": mix_eqns, "grad_eqns": grad_eqns}
 
 
 class Tracer:

@@ -48,6 +48,12 @@ TELEMETRY_FIELDS = {
                     "never connects",
     "kinds": "realized gossip-plan round kinds in the window, counted "
              "(empty = fully dropped rounds)",
+    "stale_gap": "delay-adjusted spectral gap: the windowed contraction "
+                 "of the rounds whose mixing has actually LANDED on the "
+                 "state by this step under stale-window gossip — the "
+                 "window shifted back by delay*wps rounds (the last "
+                 "delay*wps rounds are still in flight).  Equal to "
+                 "spectral_gap at delay=0; only emitted when delay > 0",
     "bytes": "payload bytes transmitted by all active senders over the "
              "rounds this step consumed — the quantized wire format "
              "(repro.core.compress.payload_bytes) once compression is on "
@@ -113,11 +119,16 @@ class TelemetryRecorder:
 
     def __init__(self, realized: gossip.WeightSchedule, wps: int,
                  window: int | None = None, every: int = 1,
-                 cache: bool = True, compression=None):
+                 cache: bool = True, compression=None, delay: int = 0):
         self.realized = realized
         self.wps = wps
         self.window = window if window is not None else max(4 * wps, 8)
         self.every = max(1, every)
+        # Stale-window gossip (AlgorithmSpec.delay): the mix issued at step
+        # k lands on the state applied to the payload from k-delay, so the
+        # last delay*wps rounds of the trailing window are "in flight" —
+        # ``stale_gap`` measures the contraction of what actually landed.
+        self.delay = max(0, int(delay))
         self.history: list = []
         # Bytes accounting: ``compression`` is a
         # repro.core.compress.CompressionConfig (None = full-precision f32
@@ -154,8 +165,9 @@ class TelemetryRecorder:
         """Materialize the window [lo, t): stacked float64 matrices, the
         stacked adjacency, and kind counts.  With the cache on, only the
         rounds that entered the window since the last call convert."""
-        if self.cache:  # rounds now behind the window never recur
-            for r in [r for r in self._rounds if r < lo]:
+        floor = lo - self.delay * self.wps  # stale window reaches further back
+        if self.cache:  # rounds now behind every window never recur
+            for r in [r for r in self._rounds if r < floor]:
                 del self._rounds[r]
         rounds = [self._round(r) for r in range(lo, t)]
         mats = np.stack([w for w, _, _ in rounds])
@@ -171,10 +183,20 @@ class TelemetryRecorder:
             return {"window": [lo, t], "spectral_gap": None,
                     "eff_diameter": None, "kinds": {}}
         mats, adjs, kinds = self._window_rounds(lo, t)
-        return {"window": [lo, t],
-                "spectral_gap": round(windowed_spectral_gap(mats), 6),
-                "eff_diameter": empirical_effective_diameter(adjs),
-                "kinds": kinds}
+        out = {"window": [lo, t],
+               "spectral_gap": round(windowed_spectral_gap(mats), 6),
+               "eff_diameter": empirical_effective_diameter(adjs),
+               "kinds": kinds}
+        if self.delay:
+            shift = self.delay * self.wps
+            s_lo, s_t = max(0, lo - shift), max(0, t - shift)
+            if s_t <= s_lo:
+                out["stale_gap"] = None  # nothing has landed yet
+            else:
+                s_mats = np.stack([self._round(r)[0]
+                                   for r in range(s_lo, s_t)])
+                out["stale_gap"] = round(windowed_spectral_gap(s_mats), 6)
+        return out
 
     def _step_bytes(self, k: int, t: int, state: Any) -> int:
         """Wire bytes the step that just consumed rounds [t - wps, t)

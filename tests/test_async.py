@@ -1,0 +1,378 @@
+"""Async overlapped gossip: stale-window delay, comm_interval gating,
+hierarchical two-level lowering, and the overlap proof.
+
+The contract under test, layer by layer:
+
+1. ``delay=0`` is BIT-EXACT to the synchronous path on every runtime
+   (host einsum, host auto-plan, dist dense, dist auto) — the feature
+   must be free when off.
+2. ``delay=d`` matches a hand-rolled stale-window recursion (the tests
+   are the oracle), and dense == auto stay bit-identical under delay.
+3. The overlap claim is *proved* from the jaxpr: with ``delay>0`` no
+   ``obs_mix`` equation transitively consumes an ``obs_grad`` output
+   (:func:`repro.obs.overlap_report`), so XLA may run the collectives
+   concurrently with the grad; at ``delay=0`` the same report shows the
+   serialization.
+4. Doubly-stochastic stale windows preserve the tracker mean invariant
+   (mean h == mean g_prev survives the delayed correction).
+5. ``comm_interval=k`` skips the mix (pure local update) on steps with
+   ``k % interval != 0`` while the delay buffers still advance.
+6. Rounds that factor as B ⊗ J_p across pod boundaries take the
+   two-level lowering: planner detection, exact dense reconstruction,
+   mixer parity, and the hierarchical topology end to end.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import exp
+from repro.core import algorithms as alg, engine, gossip
+from repro.dist import steps as dsteps
+from repro.obs import overlap_report
+
+from test_engine import ToyModel, _toy_batch
+
+
+def _tree_err(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _assert_bit_exact(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def _quadratic(n=8, d=5, hetero=2.0, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = jnp.asarray(rng.normal(size=(n, d)) * hetero)
+    return centers, lambda xs, key: xs - centers
+
+
+# ---------------------------------------------------------------------------
+# 1. delay=0 == synchronous, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,R", [("dsgd", 1), ("mc_dsgt", 2),
+                                    ("gt_local", 1)])
+def test_delay0_bit_exact_host(name, R):
+    n, d, gamma = 8, 5, 0.2
+    _, grad_fn = _quadratic(n, d)
+    sched = gossip.theorem3_weight_schedule(n, 0.6)
+    x0 = jnp.asarray(np.random.default_rng(3).normal(size=(n, d)),
+                     jnp.float32)
+    sync = alg.from_rule(engine.make_rule(name, gamma, R=R))
+    zero = alg.from_rule(engine.make_rule(name, gamma, R=R, delay=0))
+    wps = sync.weights_per_step
+    key = jax.random.key(0)
+    sa = sync.warm(sync.init(x0), grad_fn, key)
+    sb = zero.warm(zero.init(x0), grad_fn, key)
+    for k in range(3):
+        Ws = jnp.asarray(sched.stacked(k * wps, max(wps, 1)))
+        sa = sync.step(sa, grad_fn, Ws, key)
+        sb = zero.step(sb, grad_fn, Ws, key)
+    _assert_bit_exact(sa.x, sb.x)
+
+
+def test_delay0_bit_exact_dist_dense_and_auto():
+    model = ToyModel()
+    n, gamma, R = 8, 0.1, 2
+    sched = gossip.theorem3_weight_schedule(n, 0.6)
+    plan = sched.plan()
+    tensors = jax.tree.map(jnp.asarray, plan.tensors())
+    batch = _toy_batch(n, R, 3, model.d, seed=0)
+    wps = engine.make_rule("mc_dsgt", gamma=gamma, R=R).weights_per_step
+
+    states = {}
+    for tag, kw in [("sync", {}), ("d0", {"delay": 0})]:
+        init_s, warm, step = dsteps.make_train_step(
+            model, None, algo="mc_dsgt", gamma=gamma, R=R, **kw)
+        s = warm(init_s(jax.random.key(0), n, jnp.float32), batch)
+        for k in range(3):
+            Ws = jnp.asarray(sched.stacked(k * wps, wps))
+            s, _ = jax.jit(step)(s, batch, Ws)
+        states[tag] = s
+    _assert_bit_exact(states["sync"].x, states["d0"].x)
+
+    init_a, warm_a, step_a = dsteps.make_train_step(
+        model, None, algo="mc_dsgt", gamma=gamma, R=R, gossip_impl="auto",
+        plan=plan, delay=0)
+    sa = warm_a(init_a(jax.random.key(0), n, jnp.float32), batch)
+    for k in range(3):
+        sa, _ = step_a(sa, batch, tensors, (k * wps) % plan.period)
+    assert _tree_err(states["sync"].x, sa.x) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# 2. delay=d semantics: the hand-rolled recursion is the oracle
+# ---------------------------------------------------------------------------
+
+def test_delay1_dsgd_matches_manual_recursion():
+    """Stale-window DSGD, delay=1:  z_t = x_t - γ g_t;
+    x_{t+1} = z_t + (W_t q_0 - q_0);  queue <- [z_t]  (q seeded with x_0).
+    """
+    n, d, gamma, steps = 6, 4, 0.3, 5
+    centers, grad_fn = _quadratic(n, d, seed=1)
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    x0 = jnp.asarray(np.random.default_rng(7).normal(size=(n, d)),
+                     jnp.float32)
+
+    algo = alg.from_rule(engine.make_rule("dsgd", gamma, delay=1))
+    s = algo.init(x0)
+    key = jax.random.key(0)
+
+    x, q = x0, x0  # queue of length 1, seeded with x0
+    for k in range(steps):
+        W = jnp.asarray(sched.stacked(k, 1))[0]
+        s = algo.step(s, grad_fn, W[None], key)
+        z = x - gamma * grad_fn(x, None)
+        x = z + (W @ q - q)
+        q = z
+    assert _tree_err(s.x, x) < 1e-5
+
+
+def test_delay_dense_equals_auto_dist():
+    model = ToyModel()
+    n, gamma, R, delay = 8, 0.1, 2, 2
+    sched = gossip.theorem3_weight_schedule(n, 0.6)
+    plan = sched.plan()
+    tensors = jax.tree.map(jnp.asarray, plan.tensors())
+    batch = _toy_batch(n, R, 3, model.d, seed=0)
+    wps = engine.make_rule("mc_dsgt", gamma=gamma, R=R).weights_per_step
+
+    init_d, warm_d, step_d = dsteps.make_train_step(
+        model, None, algo="mc_dsgt", gamma=gamma, R=R, delay=delay)
+    init_a, warm_a, step_a = dsteps.make_train_step(
+        model, None, algo="mc_dsgt", gamma=gamma, R=R, gossip_impl="auto",
+        plan=plan, delay=delay)
+    sd = warm_d(init_d(jax.random.key(0), n, jnp.float32), batch)
+    sa = warm_a(init_a(jax.random.key(0), n, jnp.float32), batch)
+    for k in range(4):
+        Ws = jnp.asarray(sched.stacked(k * wps, wps))
+        sd, _ = jax.jit(step_d)(sd, batch, Ws)
+        sa, _ = step_a(sa, batch, tensors, (k * wps) % plan.period)
+    assert _tree_err(sd.x, sa.x) < 1e-5
+    # buffers advanced: queue depth == delay, oldest-first
+    assert len(sd.buf[0]) == delay and len(sd.buf[1]) == delay
+
+
+# ---------------------------------------------------------------------------
+# 3. The overlap proof
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delay,expect", [(0, False), (1, True)])
+def test_overlap_report_proves_mix_grad_independence(delay, expect):
+    n, d, gamma = 6, 4, 0.2
+    _, grad_fn = _quadratic(n, d)
+    algo = alg.from_rule(engine.make_rule("mc_dsgt", gamma, R=2,
+                                          delay=delay))
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    wps = algo.weights_per_step
+    x0 = jnp.zeros((n, d))
+    key = jax.random.key(0)
+    state = algo.warm(algo.init(x0), grad_fn, key)
+    Ws = jnp.asarray(sched.stacked(0, wps))
+    rep = overlap_report(lambda s: algo.step(s, grad_fn, Ws, key), state)
+    assert rep["mix_eqns"] > 0 and rep["grad_eqns"] > 0
+    assert rep["overlapped"] is expect
+
+
+# ---------------------------------------------------------------------------
+# 4. Tracker mean invariance survives the stale window
+# ---------------------------------------------------------------------------
+
+def test_tracker_mean_invariant_under_delay():
+    n, d, gamma = 8, 5, 0.15
+    _, grad_fn = _quadratic(n, d, hetero=3.0)
+    algo = alg.from_rule(engine.make_rule("mc_dsgt", gamma, R=2, delay=1))
+    sched = gossip.theorem3_weight_schedule(n, 0.6)
+    wps = algo.weights_per_step
+    x0 = jnp.zeros((n, d))
+    key = jax.random.key(0)
+    s = algo.warm(algo.init(x0), grad_fn, key)
+    for k in range(4):
+        Ws = jnp.asarray(sched.stacked(k * wps, wps))
+        s = algo.step(s, grad_fn, Ws, key)
+    # h-bar == g-bar: each doubly-stochastic stale correction is mean-free
+    assert _tree_err(jnp.mean(s.h, 0), jnp.mean(s.g_prev, 0)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# 5. comm_interval gating
+# ---------------------------------------------------------------------------
+
+def test_comm_interval_skips_mix_on_off_steps():
+    n, d, gamma = 6, 4, 0.25
+    centers, grad_fn = _quadratic(n, d, seed=2)
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    x0 = jnp.asarray(np.random.default_rng(5).normal(size=(n, d)),
+                     jnp.float32)
+    algo = alg.from_rule(engine.make_rule("dsgd", gamma, comm_interval=2))
+    s = algo.init(x0)
+    key = jax.random.key(0)
+    x = x0
+    for k in range(4):
+        W = jnp.asarray(sched.stacked(k, 1))
+        s = algo.step(s, grad_fn, W, key)
+        z = x - gamma * grad_fn(x, None)
+        x = (W[0] @ z) if k % 2 == 0 else z  # odd steps: pure local update
+    assert _tree_err(s.x, x) < 1e-5
+
+
+def test_comm_interval_rejects_compression():
+    from repro.core import compress
+    with pytest.raises(ValueError, match="comm_interval"):
+        engine.make_rule("dsgd", 0.1, comm_interval=2,
+                         compression=compress.CompressionConfig(
+                             scheme="sign", group=4))
+
+
+# ---------------------------------------------------------------------------
+# 6. Two-level hierarchical lowering
+# ---------------------------------------------------------------------------
+
+def _pod_matrix(m, p, seed=0):
+    """W = B ⊗ J_p with B a random symmetric doubly-stochastic pod mixer."""
+    rng = np.random.default_rng(seed)
+    B = np.eye(m)
+    for _ in range(3):  # a few symmetric pairwise averagings keep B ds
+        i, j = rng.choice(m, 2, replace=False)
+        P = np.eye(m)
+        P[i, i] = P[j, j] = 0.5
+        P[i, j] = P[j, i] = 0.5
+        B = P @ B @ P
+    assert not np.allclose(B, np.ones((m, m)) / m)  # stays non-complete
+    return np.kron(B, np.ones((p, p)) / p), B
+
+
+def test_planner_detects_two_level_factorization():
+    m, p = 4, 4
+    W, B = _pod_matrix(m, p)
+    rd = gossip.plan_round(W, pods=p)
+    assert rd.kind == "two_level" and rd.pods == p
+    np.testing.assert_allclose(rd.pod_B, B, atol=1e-12)
+    np.testing.assert_allclose(rd.as_dense(), W, atol=1e-12)
+    # without the pods hint the same matrix stays dense
+    assert gossip.plan_round(W).kind == "dense"
+    # structured kinds keep priority: the complete graph is NOT two_level
+    J = np.ones((m * p, m * p)) / (m * p)
+    assert gossip.plan_round(J, pods=p).kind == "complete"
+
+
+def test_two_level_mix_matches_dense():
+    m, p = 4, 4
+    W, B = _pod_matrix(m, p, seed=3)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(m * p, 7)),
+                    jnp.float32)
+    out = alg.two_level_mix(jnp.asarray(B, jnp.float32), p, x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(W, np.float32) @ np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_hierarchical_topology_dense_equals_auto():
+    base = exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=8, m=32),
+        data=exp.DataSpec(batch=4),
+        algorithm=exp.AlgorithmSpec(name="mc_dsgt", gamma=0.2, R=2),
+        topology=exp.TopologySpec(kind="hierarchical", pods=3,
+                                  local_steps=2),
+        run=exp.RunSpec(steps=4, nodes=12))
+    dense = exp.run(base, quiet=True).history
+    auto = exp.run(dataclasses.replace(
+        base, run=dataclasses.replace(base.run, gossip_impl="auto")),
+        quiet=True).history
+    assert dense and [t for t, _ in dense] == [t for t, _ in auto]
+    for (_, ld), (_, la) in zip(dense, auto):
+        np.testing.assert_allclose(ld, la, rtol=1e-5)
+
+
+def test_plan_pods_property_and_tensors():
+    m, p = 4, 2
+    W, B = _pod_matrix(m, p, seed=1)
+    sched = gossip.WeightSchedule(matrices=(W,))
+    plan = sched.plan(0, 3, pods=p)
+    assert all(r.kind == "two_level" for r in plan.rounds)
+    assert plan.pods == p
+    t = plan.tensors()
+    assert t["pod_B"].shape == (3, m, m)
+    np.testing.assert_allclose(t["pod_B"][0], B.astype(np.float32),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 7. Spec surface: new fields round-trip and validate
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip_new_fields():
+    s = exp.ExperimentSpec(
+        algorithm=exp.AlgorithmSpec(name="dsgd", delay=2, comm_interval=3),
+        topology=exp.TopologySpec(kind="hierarchical", pods=4))
+    assert exp.from_json(exp.to_json(s)) == s
+    d = exp.to_dict(s)
+    assert d["algorithm"]["delay"] == 2
+    assert d["topology"]["pods"] == 4
+
+
+@pytest.mark.parametrize("field,value,match", [
+    ("algorithm.delay", -1, "delay"),
+    ("algorithm.comm_interval", 0, "comm_interval"),
+    ("topology.pods", 0, "pods"),
+    ("topology.pods", 5, "pods"),  # 5 does not divide nodes=8
+])
+def test_build_validates_new_fields(field, value, match):
+    spec = exp.with_field(exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=4, m=8),
+        run=exp.RunSpec(steps=1, nodes=8)), field, value)
+    with pytest.raises(ValueError, match=match):
+        exp.run(spec, quiet=True)
+
+
+def test_delay_convergence_within_tolerance_of_sync():
+    """Figure-2-style sanity at test scale: a short random-sun logreg run
+    under delay 1/2 lands within a few percent of the synchronous final
+    loss (the bench asserts 2% at full length)."""
+    def run(delay):
+        spec = exp.ExperimentSpec(
+            model=exp.ModelRef(kind="logreg", d=8, m=64),
+            data=exp.DataSpec(batch=8),
+            algorithm=exp.AlgorithmSpec(name="mc_dsgt", gamma=0.25, R=2,
+                                        delay=delay),
+            topology=exp.TopologySpec(kind="random-sun"),
+            run=exp.RunSpec(steps=30, nodes=8))
+        hist = exp.run(spec, quiet=True).history
+        return hist[0][1], hist[-1][1]
+
+    init, base = run(0)
+    assert base < 0.1 * init  # the sync run converges at this scale
+    for d in (1, 2):
+        _, final = run(d)
+        # staleness shifts the trajectory by < 1% of the initial loss
+        assert final < 0.1 * init
+        assert abs(final - base) < 0.01 * init
+
+
+# ---------------------------------------------------------------------------
+# 8. Staleness telemetry
+# ---------------------------------------------------------------------------
+
+def test_stale_gap_reported_when_delayed():
+    spec = exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=8, m=16),
+        data=exp.DataSpec(batch=4),
+        algorithm=exp.AlgorithmSpec(name="dsgd", gamma=0.3, delay=1),
+        run=exp.RunSpec(steps=8, nodes=4))
+    res = exp.run(spec, quiet=True)
+    # delay alone warrants the recorder (no faults/mobility/telemetry path)
+    assert res.telemetry is not None
+    rows = [h for h in res.telemetry.history if "stale_gap" in h]
+    assert rows, "delay>0 runs must report the stale-window gap"
+    landed = [h["stale_gap"] for h in rows if h["stale_gap"] is not None]
+    assert landed and all(0.0 <= g <= 1.0 for g in landed)

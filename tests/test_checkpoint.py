@@ -203,3 +203,55 @@ def test_restore_resumes_schedule_at_correct_t_offset(tmp_path):
         np.testing.assert_allclose(h_full["loss"], h_cont["loss"], rtol=1e-6)
         np.testing.assert_allclose(h_full["consensus"], h_cont["consensus"],
                                    rtol=1e-4, atol=1e-7)
+
+
+def test_trainstate_roundtrip_delay_buffers_mid_window(tmp_path):
+    """The stale-payload queues ride the checkpoint: saving mid-delay-window
+    and restoring must continue the overlapped trajectory bit for bit (a
+    dropped or reordered queue entry changes which payload the next mix
+    consumes, so the very next step diverges)."""
+    from test_engine import ToyModel, _toy_batch
+
+    model = ToyModel()
+    n, delay = 4, 2
+    sched = gossip.theorem3_weight_schedule(n, 0.5)
+    init_s, warm, step = dsteps.make_train_step(
+        model, None, algo="mc_dsgt", gamma=0.1, R=2,
+        aux_dtype=jnp.bfloat16, delay=delay)
+    Ws = jnp.asarray(sched.stacked(0, 2))
+    batch = _toy_batch(n, 2, 3, model.d, 1)
+    state = warm(init_s(jax.random.key(0), n, jnp.float32), batch)
+    # three steps with delay=2: the queue holds one pre-save and one
+    # post-warm payload — a genuinely mid-window snapshot
+    for _ in range(3):
+        state, _ = jax.jit(step)(state, batch, Ws)
+    buf_x, buf_h = state.buf
+    assert len(buf_x) == delay and len(buf_h) == delay
+    assert jax.tree.leaves(buf_h[0])[0].dtype == jnp.bfloat16
+    restored = _roundtrip(state, tmp_path, step=3)
+    _assert_bit_exact(state, restored)
+    after_a, _ = jax.jit(step)(state, batch, Ws)
+    after_b, _ = jax.jit(step)(restored, batch, Ws)
+    _assert_bit_exact(after_a, after_b)
+
+
+def test_delay_mismatch_on_restore_warns_via_manifest(tmp_path):
+    """A delay=0 checkpoint restored under a delay>0 spec is a scenario
+    change: the manifest diff must flag ``algorithm.delay`` BEFORE the
+    structural failure (the saved state has no queues; the delayed
+    TrainState expects them, so the msgpack leaf counts cannot match)."""
+    from repro import exp
+
+    ckpt = str(tmp_path / "sync.msgpack")
+    base = exp.ExperimentSpec(
+        data=exp.DataSpec(batch=1, seq=16),
+        algorithm=exp.AlgorithmSpec(name="mc_dsgt", gamma=0.05, R=2),
+        run=exp.RunSpec(steps=2, nodes=4, checkpoint=ckpt))
+    exp.run(base, quiet=True)
+
+    delayed = exp.with_field(
+        exp.with_field(base, "run.restore", ckpt), "algorithm.delay", 1)
+    delayed = exp.with_field(delayed, "run.checkpoint", None)
+    with pytest.warns(UserWarning, match="algorithm.delay"):
+        with pytest.raises(Exception):  # leaf-count mismatch: no queues saved
+            exp.run(delayed, quiet=True)
