@@ -541,10 +541,115 @@ def bench_sim(quick: bool) -> None:
     us = (time.time() - t0) * 1e6 / rounds
     kinds = "+".join(f"{plan.kinds.count(k)}x{k}"
                      for k in dict.fromkeys(plan.kinds))
+    epr = []
+    for rd in plan.rounds:
+        off = np.abs(rd.W) > 1e-12
+        np.fill_diagonal(off, False)
+        epr.append(int(off.sum()))
     w.row("sim_plan_restage", us,
-          f"rounds_per_s={1e6 / us:.0f}|kinds={kinds}", spec=wspec)
+          f"rounds_per_s={1e6 / us:.0f}|kinds={kinds}"
+          f"|edges_per_round={np.mean(epr):.0f}", spec=wspec)
 
     w.dump("experiments/bench/BENCH_sim.json")
+
+
+# ---------------------------------------------------------------------------
+# Sparse scenario engine: staging vs n, dense comparison, segment-sum mixer
+# ---------------------------------------------------------------------------
+
+def bench_sparse(quick: bool) -> None:
+    """Throughput of the sparse scenario engine per stage and node count:
+    realize (sampled cohort + unit-disk + Metropolis edges), repair
+    (per-edge channel masks), and restage (SparseGossipPlan + padded
+    tensors) at n in {64, 1k, 10k, 100k} with a fixed per-round cohort —
+    the headline claim is near-flat us/round as n grows, because every
+    stage is O(edges) = O(k^2), never O(n^2).  The dense pipeline runs the
+    SAME sampled rounds at the n where (n, n) materialization is feasible,
+    as the baseline it escapes.  A final pair of rows prices one edge-list
+    gossip round through the jnp segment-sum reference vs the fused Pallas
+    kernel (derived = max |fused - unfused|).  Also writes
+    experiments/bench/BENCH_sparse.json — a CI artifact."""
+    from repro import exp, sparse
+    from repro.core import gossip, topology as topo
+    from repro.kernels import ops as kops
+    from repro.sim import channel as sim_channel
+
+    k = 64
+    rounds = 8 if quick else 32
+    sizes = (64, 1_000, 10_000, 100_000)
+    dense_sizes = (64, 1_000)
+    w = BenchWriter()
+
+    for n in sizes:
+        kk = min(k, n)
+        spec = exp.ExperimentSpec(
+            model=exp.ModelRef(kind="logreg"),
+            topology=exp.TopologySpec(kind="random-sampled", sample_k=kk),
+            channel=exp.ChannelSpec(link_drop=0.2),
+            run=exp.RunSpec(nodes=n, gossip_impl="auto"))
+        models = exp.build_channel_models(spec.channel, spec.run.seed)
+
+        t0 = time.time()
+        ideal = sparse.sampled_weight_schedule(n, kk, horizon=rounds)
+        us = (time.time() - t0) * 1e6 / rounds
+        epr = float(ideal.edges_per_round.mean())
+        w.row(f"sparse_realize_n{n}", us,
+              f"rounds_per_s={1e6 / us:.0f}|edges_per_round={epr:.0f}",
+              spec=spec)
+
+        t0 = time.time()
+        real = sparse.realize_sparse_schedule(ideal, models)
+        us = (time.time() - t0) * 1e6 / rounds
+        w.row(f"sparse_repair_n{n}", us,
+              f"rounds_per_s={1e6 / us:.0f}|edges_per_round="
+              f"{real.edges_per_round.mean():.0f}", spec=spec)
+
+        t0 = time.time()
+        plan = real.plan(validate=False)
+        tensors = {key: jnp.asarray(v) for key, v in plan.tensors().items()}
+        jax.block_until_ready(tensors)
+        us = (time.time() - t0) * 1e6 / rounds
+        kinds = "+".join(f"{plan.kinds.count(kd)}x{kd}"
+                         for kd in dict.fromkeys(plan.kinds))
+        w.row(f"sparse_restage_n{n}", us,
+              f"rounds_per_s={1e6 / us:.0f}|kinds={kinds}", spec=spec)
+
+        if n in dense_sizes:
+            # the dense pipeline on the SAME realized rounds: materialize
+            # (n, n) matrices, classify, and lower through the dense planner
+            t0 = time.time()
+            mats = [real(t) for t in range(rounds)]
+            ws = gossip.WeightSchedule(
+                tuple(mats),
+                tuple(topo.classify_adjacency(np.abs(M) > 1e-12)
+                      for M in mats))
+            dplan = ws.plan(0, rounds, sparse=False)
+            jax.block_until_ready(
+                {key: jnp.asarray(v) for key, v in dplan.tensors().items()})
+            us = (time.time() - t0) * 1e6 / rounds
+            w.row(f"sparse_dense_path_n{n}", us,
+                  f"rounds_per_s={1e6 / us:.0f}", spec=spec)
+
+    # fused vs unfused segment-sum mix of one realized round (n=1k cohort)
+    rd = sparse.SampledMobilitySchedule(1_000, min(256, k * 4)).round(0)
+    plan1 = sparse.SparseGossipPlan.from_rounds([rd])
+    tt = plan1.tensors()
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((1_000, 256)), jnp.float32)
+    args = tuple(jnp.asarray(tt[key][0])
+                 for key in ("esrc", "edst", "ew", "seg", "slots"))
+    us_ref, out_ref = _timed(
+        lambda: kops.sparse_gossip_mix(x, *args, use_pallas=False))
+    us_pal, out_pal = _timed(
+        lambda: kops.sparse_gossip_mix(x, *args, use_pallas=True))
+    err = float(jnp.max(jnp.abs(out_ref - out_pal)))
+    w.row("sparse_mix_segment_unfused", us_ref,
+          f"edges={rd.edges}|dim=256")
+    w.row("sparse_mix_segment_fused", us_pal,
+          f"edges={rd.edges}|dim=256|max_err={err:.2e}")
+    assert err < 1e-4, f"fused segment mix diverged: {err}"
+
+    w.dump("experiments/bench/BENCH_sparse.json")
 
 
 # ---------------------------------------------------------------------------
@@ -848,6 +953,7 @@ BENCHES = [
     ("compression", bench_compression),
     ("gossip_plan", bench_gossip_plan),
     ("sim", bench_sim),
+    ("sparse", bench_sparse),
     ("engine_step", bench_engine_step),
     ("async", bench_async),
     ("obs", bench_obs),

@@ -154,6 +154,22 @@ def two_level_mix(B: jax.Array, pods: int, tree: PyTree) -> PyTree:
     return jax.tree.map(_m, tree)
 
 
+def sparse_mix(src: jax.Array, dst: jax.Array, w: jax.Array,
+               tree: PyTree) -> PyTree:
+    """Edge-list gossip in Laplacian form (see :mod:`repro.sparse.plan`):
+    ``z = x + scatter_{dst} w * (x[src] - x[dst])`` on every leaf — one
+    gather + scatter-add of O(edges) rows instead of the dense einsum's
+    O(n^2).  The diagonal is implied (row-stochastic by construction), so
+    padded edges with ``w = 0`` are exactly inert and a dropped edge's
+    weight lands back on the diagonal for free (the lazy channel repair).
+    """
+    def _m(x):
+        wx = w.astype(x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
+        contrib = wx * (jnp.take(x, src, axis=0) - jnp.take(x, dst, axis=0))
+        return x.at[dst].add(contrib)
+    return jax.tree.map(_m, tree)
+
+
 def one_peer_mix_ppermute(perm: list, w_peer: float, tree: PyTree,
                           mesh, axis: str = "data") -> PyTree:
     """shard_map + lax.ppermute form of :func:`one_peer_mix` — the explicit
@@ -240,6 +256,11 @@ def make_plan_mixer(plan, *, mesh=None, axis: str = "data", mode: str | None = N
         elif kind == "complete":
             xs = jnp.take(tensors["avg_w"], idxs, axis=0)
             body = lambda z, a: (complete_mix(a, z), None)
+        elif kind == "sparse":
+            xs = (jnp.take(tensors["esrc"], idxs, axis=0),
+                  jnp.take(tensors["edst"], idxs, axis=0),
+                  jnp.take(tensors["ew"], idxs, axis=0))
+            body = lambda z, sdw: (sparse_mix(sdw[0], sdw[1], sdw[2], z), None)
         else:  # matching
             xs = (jnp.take(tensors["perm"], idxs, axis=0),
                   jnp.take(tensors["w_peer"], idxs, axis=0))
@@ -395,7 +416,13 @@ def plan_step(algo: DecentralizedAlgorithm, plan, *, mesh=None,
     if rule is None:
         raise ValueError("plan_step requires an engine-rule algorithm "
                          "(built via from_rule)")
-    mixer = make_plan_mixer(plan, mesh=mesh, axis=axis)
+    # Edge-list plans (repro.sparse.SparseGossipPlan) carry their own mixer
+    # factory with the same mix_fn contract — duck-typed so the core stays
+    # import-free of the sparse subsystem.
+    if hasattr(plan, "make_mixer"):
+        mixer = plan.make_mixer(mesh=mesh, axis=axis)
+    else:
+        mixer = make_plan_mixer(plan, mesh=mesh, axis=axis)
     local_update = (algo.local_opt.update if algo.local_opt is not None
                     else (lambda g, s: (g, s)))
 

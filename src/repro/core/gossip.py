@@ -89,6 +89,17 @@ def check_assumption3(W: WeightMatrix, adj: topo.Adjacency | None = None,
 # GossipPlan: per-round structured lowerings (the planning layer)
 # ---------------------------------------------------------------------------
 
+# Threshold policy for the automatic sparse lowering (``sparse="auto"``):
+# a round that no structured lowering accepts is kept as an edge list
+# instead of a dense matrix when the network is large AND the round is
+# actually sparse.  Below the node floor the dense einsum is cheap and the
+# historical lowering stays bit-exact; above it, a low-density round costs
+# O(edges) instead of O(n^2) per mix (see README "Sparse plans & client
+# sampling").
+SPARSE_MIN_NODES = 128
+SPARSE_MAX_DENSITY = 0.25
+
+
 @dataclasses.dataclass(frozen=True)
 class GossipRound:
     """One round of a :class:`GossipPlan`: the dense matrix plus, when the
@@ -103,6 +114,9 @@ class GossipRound:
     * ``two_level`` — :func:`two_level_mix`: W = B ⊗ J_p factors into an
       intra-pod average (p nodes/pod, one allreduce per pod) composed with
       the (m, m) inter-pod exchange ``pod_B`` on pod means;
+    * ``sparse``    — :func:`repro.core.algorithms.sparse_mix`: COO edge
+      scatter in Laplacian form, z = x + Σ_e w_e (x_src - x_dst) → dst
+      (diagonal implied by row-stochasticity; see :mod:`repro.sparse.plan`);
     * ``dense``     — generic mix(W, ·) einsum.
     """
 
@@ -115,6 +129,9 @@ class GossipRound:
     avg_weight: float | None = None            # complete: z = (1-a) x + a x̄
     pod_B: np.ndarray | None = None            # (m, m) inter-pod, two_level
     pods: int | None = None                    # p = nodes per pod, two_level
+    edge_src: np.ndarray | None = None         # (E,) int32, sparse
+    edge_dst: np.ndarray | None = None         # (E,) int32, sparse
+    edge_w: np.ndarray | None = None           # (E,) float64, sparse
 
     @property
     def n(self) -> int:
@@ -140,12 +157,20 @@ class GossipRound:
             p = self.pods
             return np.kron(np.asarray(self.pod_B, np.float64),
                            np.ones((p, p)) / p)
+        if self.kind == "sparse":
+            W = np.zeros((n, n))
+            W[self.edge_dst, self.edge_src] = self.edge_w
+            rowsum = np.bincount(self.edge_dst, weights=self.edge_w,
+                                 minlength=n)
+            W[np.arange(n), np.arange(n)] = 1.0 - rowsum
+            return W
         return np.asarray(self.W, np.float64)
 
 
 def plan_round(W: WeightMatrix,
                structure: "topo.RoundStructure | None" = None,
-               atol: float = 1e-9, pods: int | None = None) -> GossipRound:
+               atol: float = 1e-9, pods: int | None = None,
+               sparse: "bool | str" = "auto") -> GossipRound:
     """Lower one weight matrix to its cheapest structured form.
 
     ``structure`` is the topology-level tag when the schedule declares one;
@@ -159,6 +184,15 @@ def plan_round(W: WeightMatrix,
     flat lowerings accept is tested for the two-level factorization
     W = B ⊗ J_p and, when it factors exactly across pod boundaries,
     lowered to ``two_level`` instead of dense.
+
+    ``sparse`` controls the edge-list fallback for rounds no structured
+    (or hierarchical) lowering accepts: ``"auto"`` (default) keeps such a
+    round as COO edges instead of a dense matrix when
+    ``n >= SPARSE_MIN_NODES`` and its off-diagonal density is at most
+    ``SPARSE_MAX_DENSITY`` — below the threshold the historical dense
+    lowering is bit-exact-preserved; ``True``/``False`` force/disable the
+    sparse path regardless of size (tests use ``True`` for small-n
+    equivalence).
     """
     W = np.asarray(W, np.float64)
     n = W.shape[0]
@@ -204,6 +238,17 @@ def plan_round(W: WeightMatrix,
         # give the candidate B and _accept checks the exact kron.
         B = W.reshape(n // pods, pods, n // pods, pods).mean(axis=(1, 3)) * pods
         rd = _accept(GossipRound("two_level", W, pod_B=B, pods=pods))
+    if rd is None and sparse is not False:
+        off = np.abs(W) > atol
+        np.fill_diagonal(off, False)
+        nnz = int(off.sum())
+        density = nnz / max(1, n * (n - 1))
+        if sparse is True or (n >= SPARSE_MIN_NODES
+                              and density <= SPARSE_MAX_DENSITY):
+            dst, src = np.nonzero(off)
+            rd = _accept(GossipRound(
+                "sparse", W, edge_src=src.astype(np.int32),
+                edge_dst=dst.astype(np.int32), edge_w=W[dst, src]))
     return rd if rd is not None else GossipRound("dense", W)
 
 
@@ -282,6 +327,21 @@ class GossipPlan:
             out["pod_B"] = np.stack(
                 [r.pod_B if r.kind == "two_level" else np.eye(m)
                  for r in self.rounds]).astype(np.float32)
+        if "sparse" in kinds:
+            # per-round edge arrays padded to the widest round; pad edges
+            # carry w = 0, so they contribute exactly nothing to the mix
+            emax = max(1, max(r.edge_src.size for r in self.rounds
+                              if r.kind == "sparse"))
+            esrc = np.zeros((P, emax), np.int32)
+            edst = np.zeros((P, emax), np.int32)
+            ew = np.zeros((P, emax), np.float32)
+            for i, r in enumerate(self.rounds):
+                if r.kind == "sparse":
+                    e = r.edge_src.size
+                    esrc[i, :e] = r.edge_src
+                    edst[i, :e] = r.edge_dst
+                    ew[i, :e] = r.edge_w
+            out.update(esrc=esrc, edst=edst, ew=ew)
         return out
 
     def validate(self) -> None:
@@ -334,16 +394,19 @@ class WeightSchedule:
         return np.stack([self(t0 + r) for r in range(rounds)]).astype(dtype)
 
     def plan(self, t0: int = 0, rounds: int | None = None,
-             validate: bool = True, pods: int | None = None) -> GossipPlan:
+             validate: bool = True, pods: int | None = None,
+             sparse: "bool | str" = "auto") -> GossipPlan:
         """Lower rounds [t0, t0+rounds) (default: one full period) to a
         :class:`GossipPlan`; with ``validate`` each structured lowering is
         checked against its dense matrix via :func:`check_assumption3` and
         exact reconstruction.  ``pods`` enables the hierarchical two-level
-        lowering for rounds that factor across pod boundaries (see
+        lowering for rounds that factor across pod boundaries, ``sparse``
+        the edge-list fallback above the node/density threshold (see
         :func:`plan_round`)."""
         rounds = self.period if rounds is None else rounds
         plan = GossipPlan(tuple(
-            plan_round(self(t0 + r), self.structure(t0 + r), pods=pods)
+            plan_round(self(t0 + r), self.structure(t0 + r), pods=pods,
+                       sparse=sparse)
             for r in range(rounds)))
         if validate:
             plan.validate()

@@ -105,6 +105,15 @@ class Built:
             comp["baseline_bytes_per_round"] = compress.payload_bytes(
                 self.state_dim, "none")
         out["compression"] = comp
+        if getattr(self.schedule, "is_sparse", False):
+            e = self.schedule.edges_per_round
+            snd = self.schedule.senders_per_round
+            out["edges_per_round"] = {
+                "min": int(e.min()), "max": int(e.max()),
+                "mean": round(float(e.mean()), 1)}
+            out["senders_per_round"] = {
+                "min": int(snd.min()), "max": int(snd.max()),
+                "mean": round(float(snd.mean()), 1)}
         if self.spec.obs.metrics:
             out["event_log"] = self.spec.obs.metrics
             out["obs_names"] = list(self.obs_names)
@@ -150,6 +159,22 @@ def _validate(spec: ExperimentSpec) -> None:
     if t.pods > 1 and r.nodes % t.pods:
         raise ValueError(f"topology.pods={t.pods} must divide "
                          f"run.nodes={r.nodes}")
+    if t.kind in registry.SPARSE_TOPOLOGIES:
+        if not 2 <= t.sample_k <= r.nodes:
+            raise ValueError(f"topology.sample_k={t.sample_k}: the "
+                             f"{t.kind!r} family samples a per-round "
+                             f"cohort and needs 2 <= sample_k <= "
+                             f"run.nodes={r.nodes}")
+        if m.kind != "logreg":
+            raise ValueError(f"topology.kind={t.kind!r} runs the host "
+                             "reference runtime: model.kind must be "
+                             "'logreg'")
+        from ..sparse import DENSE_GUARD
+        if r.nodes > DENSE_GUARD and r.gossip_impl != "auto":
+            raise ValueError(
+                f"run.nodes={r.nodes} exceeds the {DENSE_GUARD}-node dense "
+                "guard: the dense host path would materialize (n, n) "
+                "matrices — set run.gossip_impl='auto'")
     if m.kind == "logreg":
         if r.gossip_impl == "pallas":
             raise ValueError("model.kind='logreg' runs the host runtime: "
@@ -199,22 +224,30 @@ def build(spec: ExperimentSpec) -> Built:
     sched = registry.build_topology(spec.topology, n, horizon=horizon,
                                     seed=rs.seed)
     fault_models = registry.build_channel_models(spec.channel, rs.seed)
+    is_sparse = getattr(sched, "is_sparse", False)
     if fault_models:
         # ideal plan -> channel degradation -> repair -> (re-)lowering: the
         # realized window replaces the schedule wholesale, so both gossip
-        # impls consume the same post-fault matrices
-        sched = sim_faults.realize_weight_schedule(sched, fault_models,
-                                                   rounds=horizon)
+        # impls consume the same post-fault matrices.  Sparse schedules are
+        # degraded edge-list-wise (per-edge hash streams, never densified).
+        if is_sparse:
+            from .. import sparse
+            sched = sparse.realize_sparse_schedule(sched, fault_models)
+        else:
+            sched = sim_faults.realize_weight_schedule(sched, fault_models,
+                                                       rounds=horizon)
     pods = spec.topology.pods if spec.topology.pods > 1 else None
     plan = (sched.plan(0, sched.period, pods=pods)
             if rs.gossip_impl == "auto" else None)
     telem = None
     if fault_models or rs.telemetry or comp is not None or rule.delay or \
-            spec.topology.kind in registry.MOBILITY_TOPOLOGIES:
-        telem = sim_telemetry.TelemetryRecorder(sched, wps=wps,
-                                                every=rs.log_every,
-                                                compression=comp,
-                                                delay=rule.delay)
+            is_sparse or spec.topology.kind in registry.MOBILITY_TOPOLOGIES:
+        if is_sparse:
+            from ..sparse import SparseTelemetryRecorder as _Recorder
+        else:
+            _Recorder = sim_telemetry.TelemetryRecorder
+        telem = _Recorder(sched, wps=wps, every=rs.log_every,
+                          compression=comp, delay=rule.delay)
     built = Built(spec=spec, rule=rule, wps=wps, horizon=horizon,
                   schedule=sched, plan=plan, fault_models=fault_models,
                   local_opt=registry.build_local_opt(al.local_opt),
@@ -264,7 +297,14 @@ def _effective_beta(sched, period: int, cap: int = 64) -> float:
     the per-round geometric mean — what the lower-bound floor's network
     term should be evaluated at."""
     rounds = max(1, min(int(period), cap))
-    c = gossip.consensus_contraction(sched, rounds)
+    if getattr(sched, "is_sparse", False):
+        # edge-list schedules never densify: the window contraction comes
+        # from power iteration on the participant subspace
+        from .. import sparse
+        c = 1.0 - sparse.sparse_windowed_gap(
+            [sched.round(t) for t in range(rounds)])
+    else:
+        c = gossip.consensus_contraction(sched, rounds)
     c = min(max(float(c), 0.0), 1.0 - 1e-9)
     return c ** (1.0 / rounds)
 

@@ -153,7 +153,27 @@ def _hierarchical(s: TopologySpec, n: int, *, horizon=None, seed=0):
     return gossip.WeightSchedule(tuple(mats), tuple(structs))
 
 
+@register_topology("random-sampled")
+def _random_sampled(s: TopologySpec, n: int, *, horizon=None, seed=0):
+    """Client sampling at scale: each round draws ``sample_k`` of the ``n``
+    nodes, places them by hashed waypoint mobility, and gossips over the
+    unit-disk graph among the sampled cohort with Metropolis weights.  The
+    schedule is an edge-list :class:`repro.sparse.SparseWeightSchedule`
+    (never a dense matrix), so ``n`` can reach 10^5..10^6 — per-round cost
+    is O(sample_k^2) to realize and O(edges) to mix."""
+    from .. import sparse
+    if horizon is None:
+        raise ValueError("random-sampled topology needs a horizon")
+    return sparse.sampled_weight_schedule(n, s.sample_k, radius=s.radius,
+                                          seed=seed, horizon=horizon)
+
+
 MOBILITY_TOPOLOGIES = ("geometric-mobility", "waypoint-mobility")
+
+# Families whose builder returns an edge-list SparseWeightSchedule
+# (is_sparse = True): faults realize via repro.sparse.realize_sparse_schedule
+# and telemetry via SparseTelemetryRecorder, never densifying.
+SPARSE_TOPOLOGIES = ("random-sampled",)
 
 
 def build_topology(s: TopologySpec, n: int, *, horizon: int | None = None,

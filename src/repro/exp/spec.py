@@ -41,7 +41,9 @@ class TopologySpec:
     B ⊗ J_p across pod boundaries take the hierarchical two-level lowering
     under ``gossip_impl='auto'``, and the ``hierarchical`` family builds
     such schedules: ``local_steps`` intra-pod averaging rounds then one
-    inter-pod matching round)."""
+    inter-pod matching round), ``sample_k`` (random-sampled: clients
+    gossiping per round — the sparse edge-list family, where per-round
+    cost is O(edges) and ``n`` can reach 10^5..10^6)."""
 
     kind: str = "sun"
     beta: float = 0.75
@@ -51,6 +53,7 @@ class TopologySpec:
     centers: int = 1
     resample_period: int = 16
     pods: int = 1
+    sample_k: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

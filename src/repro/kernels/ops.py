@@ -24,6 +24,7 @@ from .gossip_matmul import gossip_mix as _gossip
 from .interpret import resolve_interpret  # noqa: F401  (re-export: the API)
 from .linear_recurrence import linear_recurrence as _linrec
 from .quantized_gossip import quantized_gossip_mix as _qgossip
+from .sparse_gossip import sparse_segment_mix as _sparse_segment
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
@@ -64,6 +65,45 @@ def gossip_mix(ws, x, *, use_pallas=False, interpret="auto", block_d=1024):
         return _gossip(ws, x, block_d=block_d,
                        interpret=resolve_interpret(interpret))
     return ref.gossip_mix_ref(ws, x)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_e", "block_d"))
+def sparse_gossip_mix(x, src, dst, w, seg, slots, *, use_pallas=False,
+                      interpret="auto", block_e=512, block_d=512):
+    """One edge-list gossip round on an (n, D) state matrix:
+    ``z = x + scatter_{dst} w * (x[src] - x[dst])`` (Laplacian form, see
+    :mod:`repro.sparse.plan`).
+
+    ``seg``/``slots`` are the compacted receiver segments a
+    :meth:`repro.sparse.plan.SparseGossipPlan.tensors` staging provides:
+    ``slots`` (S,) holds the distinct receiver ids (padded with an
+    out-of-range id, dropped by the scatter) and ``seg[e]`` indexes
+    ``dst[e]`` within ``slots``.  Both paths (Pallas segment-sum kernel
+    and the ``jax.ops.segment_sum`` reference) share this layout, so they
+    agree to float tolerance and padded edges (``w = 0``) are inert.
+    """
+    xs = jnp.take(x, src, axis=0)
+    xd = jnp.take(x, dst, axis=0)
+    S = slots.shape[0]
+    if use_pallas:
+        E, D = xs.shape
+        be = min(block_e, max(8, E))
+        ep = -E % be
+        dp = -D % 128
+        pad = lambda a, n_: jnp.pad(a, ((0, n_),) + ((0, 0),) * (a.ndim - 1))
+        seg_p, w_p = pad(seg, ep), pad(w, ep)
+        xs_p = jnp.pad(xs, ((0, ep), (0, dp)))
+        xd_p = jnp.pad(xd, ((0, ep), (0, dp)))
+        sp = -S % 8
+        delta = _sparse_segment(seg_p, w_p, xs_p, xd_p,
+                                num_segments=S + sp, block_e=be,
+                                block_d=block_d,
+                                interpret=resolve_interpret(interpret))
+        delta = delta[:S, :D]
+    else:
+        delta = ref.sparse_gossip_mix_ref(seg, w, xs, xd, S)
+    return x.at[slots].add(delta.astype(x.dtype), mode="drop")
 
 
 @functools.partial(jax.jit, static_argnames=("scheme", "group",

@@ -68,6 +68,20 @@ def gossip_mix_ref(ws, x):
     return out.astype(x.dtype)
 
 
+def sparse_gossip_mix_ref(seg, w, xs, xd, num_segments):
+    """Segment-sum of weighted edge differences, the sparse-gossip oracle.
+
+    ``delta[s] = sum_{e: seg[e] == s} w[e] * (xs[e] - xd[e])`` — the
+    per-receiver update of one edge-list gossip round in Laplacian form
+    (see :mod:`repro.sparse.plan`).  seg: (E,) int32; w: (E,);
+    xs, xd: (E, D) gathered endpoint states.  Padded edges carry w = 0 and
+    contribute nothing.  Returns (num_segments, D) float32.
+    """
+    contrib = w[:, None].astype(jnp.float32) * (
+        xs.astype(jnp.float32) - xd.astype(jnp.float32))
+    return jax.ops.segment_sum(contrib, seg, num_segments=num_segments)
+
+
 def quantize_dequantize_ref(buf, *, scheme, group=256):
     """Group-wise quantize -> dequantize of an (n, D) f32 matrix
     (D % group == 0); returns (dequantized, error = buf - dequantized).

@@ -48,6 +48,8 @@ from repro.exp import make_weight_schedule  # noqa: F401  (legacy import site)
 FLAG_TO_FIELD = {
     "arch": "model.arch",
     "preset": "model.preset",
+    "logreg_d": "model.d",
+    "logreg_m": "model.m",
     "steps": "run.steps",
     "nodes": "run.nodes",
     "beta": "topology.beta",
@@ -59,6 +61,7 @@ FLAG_TO_FIELD = {
     "radius": "topology.radius",
     "local_steps": "topology.local_steps",
     "pods": "topology.pods",
+    "sample_k": "topology.sample_k",
     "delay": "algorithm.delay",
     "comm_interval": "algorithm.comm_interval",
     "link_drop": "channel.link_drop",
@@ -98,8 +101,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dump-config", action="store_true",
                     help="print the fully-resolved spec JSON and exit "
                          "(pipe to a file, rerun with --config)")
-    ap.add_argument("--arch")
+    ap.add_argument("--arch",
+                    help="registered LM architecture (repro.configs), or "
+                         "'logreg' for the paper's host-runtime logistic "
+                         "regression (required by --topology random-sampled)")
     ap.add_argument("--preset", choices=["reduced", "full"])
+    ap.add_argument("--logreg-d", type=int, dest="logreg_d",
+                    help="--arch logreg: feature dimension (default 64; "
+                         "keep small at 10^5+ nodes — the dataset is "
+                         "n x m x d)")
+    ap.add_argument("--logreg-m", type=int, dest="logreg_m",
+                    help="--arch logreg: samples per node (default 256)")
     ap.add_argument("--steps", type=int)
     ap.add_argument("--nodes", type=int)
     ap.add_argument("--beta", type=float)
@@ -128,6 +140,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "factor as B ⊗ J_p across pod boundaries take the "
                          "hierarchical two-level lowering under --gossip-impl "
                          "auto; --topology hierarchical builds such schedules")
+    ap.add_argument("--sample-k", type=int, dest="sample_k",
+                    help="clients gossiping per round for --topology "
+                         "random-sampled (the sparse edge-list family: "
+                         "per-round cost O(edges), n can reach 10^5..10^6)")
     ap.add_argument("--delay", type=int,
                     help="stale-window gossip: mix the payload from N steps "
                          "ago and fold only the correction into the fresh "
@@ -218,6 +234,12 @@ def spec_from_args(args: argparse.Namespace) -> exp.ExperimentSpec:
     overrides = {FLAG_TO_FIELD[dest]: value
                  for dest, value in vars(args).items()
                  if dest in FLAG_TO_FIELD}
+    # ``--arch logreg`` selects the paper's host-runtime logistic
+    # regression (model.kind), not a registered LM architecture — the
+    # required model for the sparse sampled-client topologies.
+    if overrides.get("model.arch") == "logreg":
+        del overrides["model.arch"]
+        overrides["model.kind"] = "logreg"
     return exp.with_overrides(spec, overrides)
 
 

@@ -27,12 +27,25 @@ import dataclasses
 
 import numpy as np
 
+from . import hashrand
+
 # SeedSequence domain tags (disjoint per stream; see repro.sim.mobility).
 _BERNOULLI_TAG = 0xB0
 _GE_BLOCK_TAG = 0x6E
 _GE_STEP_TAG = 0x6F
 _GE_LOSS_TAG = 0x70
 _LATENCY_TAG = 0x1A7
+
+# Counter-hash tags for the edge-list query path (``edge_mask``).  These
+# are separate streams from the dense ``mask`` draws above: equal in
+# distribution, NOT bitwise equal — the dense path draws whole (n, n)
+# matrices from generator streams, the edge path random-accesses one
+# uniform per (t, link) so sparse scenarios stay O(edges) per round.
+_BERNOULLI_EDGE_TAG = 0xB1
+_GE_EDGE_BLOCK_TAG = 0x71
+_GE_EDGE_STEP_TAG = 0x72
+_GE_EDGE_LOSS_TAG = 0x73
+_LATENCY_EDGE_TAG = 0x1A8
 
 
 def _symmetric_uniform(rng: np.random.Generator, n: int) -> np.ndarray:
@@ -61,6 +74,14 @@ class BernoulliDropChannel:
         m = _symmetric_uniform(rng, n) >= self.drop
         np.fill_diagonal(m, True)
         return m
+
+    def edge_mask(self, t: int, src, dst) -> np.ndarray:
+        """(E,) survival mask for the queried directed edges — O(E), its
+        own hash stream (see the edge-tag note at module top).  Symmetric
+        in the endpoints; ``src == dst`` entries always survive."""
+        lo, hi = hashrand.edge_canonical(src, dst)
+        u = hashrand.counter_uniform(self.seed, _BERNOULLI_EDGE_TAG, t, lo, hi)
+        return (u >= self.drop) | (lo == hi)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +132,30 @@ class GilbertElliottChannel:
         np.fill_diagonal(drop, False)
         return ~drop
 
+    def edge_bad_state(self, t: int, lo, hi) -> np.ndarray:
+        """Bad-state bits for canonical edge keys — the same block-regen
+        chain as :meth:`bad_state`, iterated over only the queried edges
+        (O(E * block) hash evaluations, n-independent)."""
+        denom = self.p_bad + self.p_good
+        pi_bad = self.p_bad / denom if denom > 0 else 0.0
+        b0 = (t // self.block) * self.block
+        u0 = hashrand.counter_uniform(self.seed, _GE_EDGE_BLOCK_TAG,
+                                      t // self.block, lo, hi)
+        bad = u0 < pi_bad
+        for r in range(b0 + 1, t + 1):
+            u = hashrand.counter_uniform(self.seed, _GE_EDGE_STEP_TAG,
+                                         r, lo, hi)
+            bad = np.where(bad, u < 1.0 - self.p_good, u < self.p_bad)
+        return bad
+
+    def edge_mask(self, t: int, src, dst) -> np.ndarray:
+        """(E,) survival mask over queried edges — its own hash stream."""
+        lo, hi = hashrand.edge_canonical(src, dst)
+        u = hashrand.counter_uniform(self.seed, _GE_EDGE_LOSS_TAG, t, lo, hi)
+        drop = np.where(self.edge_bad_state(t, lo, hi),
+                        u < self.drop_bad, u < self.drop_good)
+        return ~drop | (lo == hi)
+
 
 @dataclasses.dataclass(frozen=True)
 class LinkLatencyModel:
@@ -128,3 +173,10 @@ class LinkLatencyModel:
         lat = np.exp(self.mu + self.sigma * _symmetric_normal(rng, n))
         np.fill_diagonal(lat, 0.0)
         return lat
+
+    def edge_sample(self, t: int, src, dst) -> np.ndarray:
+        """(E,) lognormal latencies for queried edges — its own hash
+        stream; ``src == dst`` entries are 0 like the dense diagonal."""
+        lo, hi = hashrand.edge_canonical(src, dst)
+        z = hashrand.counter_normal(self.seed, _LATENCY_EDGE_TAG, t, lo, hi)
+        return np.where(lo == hi, 0.0, np.exp(self.mu + self.sigma * z))

@@ -21,11 +21,18 @@ from typing import Sequence
 import numpy as np
 
 from ..core import gossip, topology as topo
-from . import channel as chan
+from . import channel as chan, hashrand
 
 _CHURN_BLOCK_TAG = 0xC0
 _CHURN_STEP_TAG = 0xC1
 _STRAGGLER_TAG = 0x57
+
+# Counter-hash tags for the edge-list query path (O(edges) sparse
+# scenarios): distinct streams from the dense draws above, equal in
+# distribution but not bitwise equal — see repro.sim.channel.
+_CHURN_EDGE_BLOCK_TAG = 0xC2
+_CHURN_EDGE_STEP_TAG = 0xC3
+_STRAGGLER_EDGE_TAG = 0x58
 
 
 def repair_weights(W: np.ndarray, mask: np.ndarray) -> np.ndarray:
@@ -54,6 +61,18 @@ def repair_weights(W: np.ndarray, mask: np.ndarray) -> np.ndarray:
     lost = np.where(~keep & ~eye, W, 0.0).sum(axis=1)
     out[eye] = W[eye] + lost
     return out
+
+
+def repair_edges(w: np.ndarray, keep: np.ndarray) -> np.ndarray:
+    """:func:`repair_weights` on an edge list: ``w[keep]``.
+
+    In the Laplacian edge form (:mod:`repro.sparse.plan`, diagonal implied
+    as ``1 - rowsum``) dropping an edge IS the lazy repair — the lost
+    weight returns to both endpoints' diagonals by construction, with no
+    densification and no renormalization pass.  This one-liner exists to
+    make that contract explicit (and testable) next to the dense repair.
+    """
+    return np.asarray(w)[np.asarray(keep, bool)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +108,26 @@ class NodeChurn:
         np.fill_diagonal(m, True)
         return m
 
+    def node_alive(self, t: int, nodes) -> np.ndarray:
+        """Alive bits for the queried node ids only — the same block-regen
+        chain as :meth:`alive` on its own hash stream, O(|nodes| * block)."""
+        nodes = np.asarray(nodes)
+        denom = self.p_fail + self.p_recover
+        pi_down = self.p_fail / denom if denom > 0 else 0.0
+        b0 = (t // self.block) * self.block
+        down = hashrand.counter_uniform(
+            self.seed, _CHURN_EDGE_BLOCK_TAG, t // self.block, nodes) < pi_down
+        for r in range(b0 + 1, t + 1):
+            u = hashrand.counter_uniform(self.seed, _CHURN_EDGE_STEP_TAG,
+                                         r, nodes)
+            down = np.where(down, u < 1.0 - self.p_recover, u < self.p_fail)
+        return ~down
+
+    def edge_mask(self, t: int, src, dst) -> np.ndarray:
+        src, dst = np.asarray(src), np.asarray(dst)
+        alive = self.node_alive(t, np.stack([src, dst]))
+        return (alive[0] & alive[1]) | (src == dst)
+
 
 @dataclasses.dataclass(frozen=True)
 class StragglerInjection:
@@ -120,6 +159,18 @@ class StragglerInjection:
         np.fill_diagonal(m, True)
         return m
 
+    def edge_mask(self, t: int, src, dst) -> np.ndarray:
+        """(E,) deadline mask for queried edges — per-node straggle bits
+        and per-edge latencies from their own hash streams."""
+        src, dst = np.asarray(src), np.asarray(dst)
+        lat_model = self.latency or chan.LinkLatencyModel(seed=self.seed)
+        lat = lat_model.edge_sample(t, src, dst)
+        slow = hashrand.counter_uniform(self.seed, _STRAGGLER_EDGE_TAG,
+                                        t, np.stack([src, dst])) < self.prob
+        factor = np.where(slow, self.slowdown, 1.0)
+        eff = lat * np.maximum(factor[0], factor[1])
+        return (eff <= self.deadline) | (src == dst)
+
 
 def combined_mask(models: Sequence, t: int, n: int) -> np.ndarray:
     """AND of every model's survival mask, symmetrized (a link needs both
@@ -131,6 +182,19 @@ def combined_mask(models: Sequence, t: int, n: int) -> np.ndarray:
     m &= m.T
     np.fill_diagonal(m, True)
     return m
+
+
+def combined_edge_mask(models: Sequence, t: int, src, dst) -> np.ndarray:
+    """AND of every model's edge-level survival mask, O(edges).
+
+    Symmetry needs no extra pass: every ``edge_mask`` hashes canonical
+    (lo, hi) endpoint keys, so both directed entries of an undirected edge
+    get the same draw."""
+    src, dst = np.asarray(src), np.asarray(dst)
+    m = np.ones(src.shape, dtype=bool)
+    for model in models:
+        m &= np.asarray(model.edge_mask(t, src, dst), bool)
+    return m | (src == dst)
 
 
 def realize_weight_schedule(ideal: gossip.WeightSchedule,

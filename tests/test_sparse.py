@@ -1,0 +1,364 @@
+"""Sparse scenario engine: edge-list rounds/plans, the Pallas segment-sum
+mixer, sampled-client topologies, O(edges) fault realization, and the
+sparse telemetry proxies — pinned against the dense stack at small n.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import exp, sparse
+from repro.core import algorithms as alg, driver, engine, gossip
+from repro.core import topology as topo
+from repro.data import logreg_dataset, logreg_loss_and_grad
+from repro.kernels import ops as kops
+from repro.sim import channel as sim_channel, faults as sim_faults, \
+    hashrand, telemetry as sim_telemetry
+
+
+def _chain_dense(mats, x):
+    for W in mats:
+        x = W @ x
+    return x
+
+
+# ---------------------------------------------------------------------------
+# 1. Representation: dense <-> edge-list round trips are bit-exact
+# ---------------------------------------------------------------------------
+
+def _dense_schedules_64():
+    return {
+        "matching": gossip.schedule_from_topology(
+            topo.one_peer_exponential_schedule(64)),
+        "sun": gossip.theorem3_weight_schedule(64, 0.75),
+    }
+
+
+@pytest.mark.parametrize("family", ["matching", "sun"])
+def test_round_from_dense_bit_exact(family):
+    ws = _dense_schedules_64()[family]
+    for t in range(min(ws.period, 6)):
+        W = np.asarray(ws(t), np.float64)
+        rd = sparse.round_from_dense(W)
+        rd.check()
+        assert np.array_equal(rd.as_dense(), W)  # pinned diag: bit-exact
+
+
+def test_sampled_round_bit_exact_and_deterministic():
+    sched = sparse.SampledMobilitySchedule(64, sample_k=16, seed=3)
+    for t in (0, 5, 11):
+        rd, rd2 = sched.round(t), sched.round(t)
+        assert np.array_equal(rd.src, rd2.src)
+        assert np.array_equal(rd.w, rd2.w)  # (seed, t)-pure
+        rd.check()
+        W = rd.as_dense()
+        gossip.check_assumption3(W)
+        assert np.array_equal(sparse.round_from_dense(W).as_dense(), W)
+
+
+def test_plan_as_dense_reconstructs_dense_plan():
+    ws = gossip.theorem3_weight_schedule(64, 0.75)
+    plan = sparse.from_weight_schedule(ws).plan()
+    dense_plan = plan.as_dense(validate=True)
+    assert dense_plan.period == ws.period
+    for r in range(ws.period):
+        assert np.array_equal(dense_plan.rounds[r].W, np.asarray(ws(r)))
+
+
+def test_schedule_duck_type_surface():
+    sws = sparse.sampled_weight_schedule(64, 8, horizon=6, seed=1)
+    assert sws.is_sparse and sws.n == 64 and sws.period == 6
+    assert np.array_equal(sws(2), sws.round(2).as_dense())
+    assert sws.structure(2).kind in ("empty", "matching", "dense")
+    assert sws.stacked(0, 3).shape == (3, 64, 64)
+    assert sws.edges_per_round.shape == (6,)
+    assert (sws.senders_per_round <= 8).all()
+
+
+def test_dense_guard_refuses_materialization():
+    sws = sparse.sampled_weight_schedule(20_000, 4, horizon=2, seed=0)
+    with pytest.raises(ValueError, match="gossip_impl='auto'"):
+        sws.stacked(0, 1)
+    with pytest.raises(ValueError, match="edge-list"):
+        sws.round(0).as_dense()
+
+
+# ---------------------------------------------------------------------------
+# 2. Mixing: scatter path, Pallas kernel, and the core "sparse" round kind
+# ---------------------------------------------------------------------------
+
+def test_sparse_gossip_mix_matches_dense():
+    sched = sparse.SampledMobilitySchedule(64, sample_k=24, seed=5)
+    rd = sched.round(2)
+    assert rd.edges > 0
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 16)).astype(np.float32)
+    want = rd.as_dense() @ x
+
+    assert np.allclose(rd.apply(x), want, atol=1e-12)  # numpy host path
+
+    plan = sparse.SparseGossipPlan.from_rounds([rd])
+    tt = plan.tensors()
+    args = (jnp.asarray(x), jnp.asarray(tt["esrc"][0]),
+            jnp.asarray(tt["edst"][0]), jnp.asarray(tt["ew"][0]),
+            jnp.asarray(tt["seg"][0]), jnp.asarray(tt["slots"][0]))
+    got_ref = kops.sparse_gossip_mix(*args, use_pallas=False)
+    got_pal = kops.sparse_gossip_mix(*args, use_pallas=True)
+    assert np.allclose(got_ref, want, atol=1e-5)
+    assert np.allclose(got_pal, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_plan_mixer_matches_dense_window(use_pallas):
+    sws = sparse.sampled_weight_schedule(64, 16, horizon=6, seed=2)
+    plan = sws.plan()
+    mixer = plan.make_mixer(use_pallas=use_pallas)
+    rng = np.random.default_rng(1)
+    tree = {"a": jnp.asarray(rng.standard_normal((64, 8)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((64, 3, 4)), jnp.float32)}
+    tensors = {k: jnp.asarray(v) for k, v in plan.tensors().items()}
+    out = mixer(tensors, 0, 6, tree)
+    mats = [sws(t) for t in range(6)]
+    for k in tree:
+        want = _chain_dense(mats, np.asarray(tree[k]).reshape(64, -1))
+        assert np.allclose(np.asarray(out[k]).reshape(64, -1), want,
+                           atol=5e-5), k
+
+
+def test_core_plan_sparse_round_kind():
+    """The dense planner's edge-list fallback: forced at small n, automatic
+    above the node/density thresholds, dense below them (bit-exact)."""
+    W = sparse.SampledMobilitySchedule(64, sample_k=24, seed=5) \
+        .round(2).as_dense()
+    assert gossip.plan_round(W).kind == "dense"        # auto: n < 128
+    forced = gossip.plan_round(W, sparse=True)
+    assert forced.kind == "sparse"
+    assert np.allclose(forced.as_dense(), W, atol=1e-12)
+
+    big = sparse.SampledMobilitySchedule(256, sample_k=24, seed=5) \
+        .round(2).as_dense()
+    assert gossip.plan_round(big).kind == "sparse"     # auto: past threshold
+    assert gossip.plan_round(big, sparse=False).kind == "dense"
+
+    # structured rounds keep their structured lowering even when forced
+    sun = gossip.theorem3_weight_schedule(64, 0.75)(1)
+    assert gossip.plan_round(np.asarray(sun), sparse=True).kind != "sparse"
+
+
+def test_core_plan_sparse_mixing_matches_dense():
+    """A core GossipPlan holding 'sparse'-kind rounds mixes identically to
+    the dense plan of the same window (the _apply_uniform scan branch)."""
+    sched = sparse.SampledMobilitySchedule(64, sample_k=24, seed=7)
+    mats = [sched.round(t).as_dense() for t in range(4)]
+    ws = gossip.WeightSchedule(
+        tuple(mats), tuple(topo.classify_adjacency(np.abs(M) > 1e-12)
+                           for M in mats))
+    plan_sparse = ws.plan(0, 4, sparse=True)
+    plan_dense = ws.plan(0, 4, sparse=False)
+    assert set(plan_sparse.kinds) == {"sparse"}
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    ten_s = {k: jnp.asarray(v) for k, v in plan_sparse.tensors().items()}
+    ten_d = {k: jnp.asarray(v) for k, v in plan_dense.tensors().items()}
+    mix_s = alg.make_plan_mixer(plan_sparse)
+    mix_d = alg.make_plan_mixer(plan_dense)
+    got_s = mix_s(ten_s, 0, 4, x)
+    got_d = mix_d(ten_d, 0, 4, x)
+    assert np.allclose(got_s, got_d, atol=5e-5)
+    assert np.allclose(got_s, _chain_dense(mats, np.asarray(x)), atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# 3. Fault realization on edge lists
+# ---------------------------------------------------------------------------
+
+def test_repaired_sampled_rounds_satisfy_assumption3():
+    ideal = sparse.sampled_weight_schedule(64, 16, horizon=8, seed=4)
+    models = [sim_channel.BernoulliDropChannel(0.3, seed=11),
+              sim_faults.NodeChurn(0.1, seed=12)]
+    real = sparse.realize_sparse_schedule(ideal, models)
+    assert real.period == ideal.period
+    dropped = 0
+    for t in range(real.period):
+        rd = real.round(t)
+        rd.check()
+        gossip.check_assumption3(rd.as_dense())
+        dropped += ideal.round(t).edges - rd.edges
+    assert dropped > 0  # the channel actually removed edges
+
+
+def test_edge_masks_deterministic_symmetric_diagonal_safe():
+    src = np.repeat(np.arange(16), 16).astype(np.int64)
+    dst = np.tile(np.arange(16), 16).astype(np.int64)
+    models = [sim_channel.BernoulliDropChannel(0.4, seed=1),
+              sim_channel.GilbertElliottChannel(0.3, seed=2),
+              sim_faults.NodeChurn(0.3, seed=3),
+              sim_faults.StragglerInjection(0.3, seed=4)]
+    for m in models:
+        a = m.edge_mask(5, src, dst)
+        b = m.edge_mask(5, src, dst)
+        assert np.array_equal(a, b), type(m).__name__      # (seed, t)-pure
+        flipped = m.edge_mask(5, dst, src)
+        assert np.array_equal(a, flipped), type(m).__name__  # symmetric
+        assert a[src == dst].all(), type(m).__name__  # never drops self
+        assert a.any() and not a[src != dst].all(), type(m).__name__
+    comb = sim_faults.combined_edge_mask(models, 5, src, dst)
+    every = np.logical_and.reduce([m.edge_mask(5, src, dst)
+                                   for m in models])
+    assert np.array_equal(comb, every | (src == dst))
+
+
+def test_bernoulli_edge_mask_rate():
+    n = 400
+    lo, hi = np.triu_indices(n, k=1)
+    ch = sim_channel.BernoulliDropChannel(0.25, seed=9)
+    keep = np.mean([ch.edge_mask(t, lo, hi).mean() for t in range(6)])
+    assert abs(keep - 0.75) < 0.01
+
+
+def test_hashrand_streams():
+    u = hashrand.counter_uniform(7, 0xB1, np.arange(4096), 3)
+    assert np.array_equal(
+        u, hashrand.counter_uniform(7, 0xB1, np.arange(4096), 3))
+    assert (u >= 0).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 0.02
+    assert not np.array_equal(
+        u, hashrand.counter_uniform(7, 0xB1, np.arange(4096), 4))
+    g = hashrand.counter_normal(7, 0x57, np.arange(4096))
+    assert abs(g.mean()) < 0.06 and abs(g.std() - 1.0) < 0.06
+    lo, hi = hashrand.edge_canonical(np.array([3, 5]), np.array([5, 3]))
+    assert np.array_equal(lo, [3, 3]) and np.array_equal(hi, [5, 5])
+
+
+# ---------------------------------------------------------------------------
+# 4. Host equivalence on the Figure-2 scenario
+# ---------------------------------------------------------------------------
+
+def test_figure2_host_losses_dense_vs_sparse():
+    """The §6 random-sun protocol at n=64: the same run through the dense
+    host path and through the edge-list plan must trace the same losses."""
+    n, d, m = 64, 8, 16
+    ws = exp.registry.build_topology(exp.TopologySpec(kind="random-sun"), n)
+    H, y = logreg_dataset(n, m, d, seed=0)
+    _, _, stoch, _, gnorm2 = logreg_loss_and_grad(rho=0.1)
+    grad_fn = lambda xs, key: stoch(xs, H, y, key, 8)
+    eval_fn = lambda xb: gnorm2(xb, H, y)
+    rule = engine.make_rule("mc_dsgt", gamma=0.3, R=2)
+    algo = alg.from_rule(rule, None)
+    x0 = jnp.zeros((n, d))
+
+    def run(schedule, impl, plan=None):
+        _, hist = driver.run_algorithm(
+            algo, x0, grad_fn, schedule, 6, jax.random.key(0),
+            eval_fn=eval_fn, eval_every=1, gossip_impl=impl, plan=plan)
+        return np.array([float(v) for _, v in hist])
+
+    base = run(ws, "dense")
+    sws = sparse.from_weight_schedule(ws)
+    got = run(sws, "auto", plan=sws.plan())
+    assert base[-1] < base[0]  # the scenario actually optimizes
+    assert np.allclose(got, base, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 5. Telemetry: gap proxy and sender-only wire pricing
+# ---------------------------------------------------------------------------
+
+def test_sparse_gap_matches_dense_windowed_gap():
+    ws = gossip.schedule_from_topology(
+        topo.StaticSchedule(topo.ring_graph(16)))
+    mats = np.stack([np.asarray(ws(t), np.float64) for t in range(2)])
+    dense_gap = sim_telemetry.windowed_spectral_gap(mats)
+    assert 0.0 < dense_gap < 1.0  # a discriminating window
+    rounds = [sparse.round_from_dense(M) for M in mats]
+    got = sparse.sparse_windowed_gap(rounds, iters=60)
+    assert abs(got - dense_gap) < 1e-5
+    assert sparse.sparse_windowed_gap(
+        [sparse.SparseRound(8, np.empty(0, np.int32),
+                            np.empty(0, np.int32), np.empty(0))]) == 0.0
+
+
+def test_sparse_step_bytes_counts_participating_senders():
+    from repro.core import compress
+
+    sws = sparse.sampled_weight_schedule(64, 8, horizon=4, seed=6)
+    rec = sparse.SparseTelemetryRecorder(sws, wps=2)
+
+    class St:
+        x = jnp.zeros((64, 4))
+
+    entry = rec.record(0, 2, St(), {}, 0.0)
+    per = compress.payload_bytes(4, "none")
+    want = (sws.round(0).senders + sws.round(1).senders) * per
+    assert entry["bytes"] == want
+    assert rec.bytes_total == want
+    assert entry["spectral_gap"] is not None
+    assert entry["eff_diameter"] is None
+    assert set(entry["kinds"]) <= {"empty", "matching", "sparse"}
+
+
+# ---------------------------------------------------------------------------
+# 6. exp integration: the random-sampled family end to end
+# ---------------------------------------------------------------------------
+
+def _sampled_spec(**over):
+    base = exp.ExperimentSpec(
+        model=exp.ModelRef(kind="logreg", d=8, m=16),
+        data=exp.DataSpec(batch=4),
+        topology=exp.TopologySpec(kind="random-sampled", sample_k=16),
+        run=exp.RunSpec(steps=2, nodes=128, gossip_impl="auto"))
+    return exp.with_overrides(base, over)
+
+
+def test_exp_random_sampled_end_to_end():
+    spec = _sampled_spec(**{"channel.link_drop": 0.2})
+    res = exp.run(spec, quiet=True)
+    built = res.built
+    assert getattr(built.schedule, "is_sparse", False)
+    assert isinstance(res.telemetry, sparse.SparseTelemetryRecorder)
+    assert set(built.plan.kinds) <= {"empty", "matching", "sparse"}
+    realized = built.realized
+    assert realized["edges_per_round"]["max"] <= 16 * 15
+    assert realized["senders_per_round"]["max"] <= 16
+    assert np.isfinite(float(res.history[-1][1]))
+
+
+def test_exp_random_sampled_dense_matches_auto():
+    la = [float(v) for _, v in
+          exp.run(_sampled_spec(), quiet=True).history]
+    ld = [float(v) for _, v in
+          exp.run(_sampled_spec(**{"run.gossip_impl": "dense"}),
+                  quiet=True).history]
+    assert np.allclose(la, ld, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("over,match", [
+    ({"topology.sample_k": 0}, "sample_k"),
+    ({"topology.sample_k": 4096}, "sample_k"),
+    ({"model.kind": "arch"}, "logreg"),
+    ({"run.nodes": 10_000, "topology.sample_k": 16,
+      "run.gossip_impl": "dense"}, "dense guard"),
+])
+def test_exp_random_sampled_validation(over, match):
+    with pytest.raises(ValueError, match=match):
+        exp.build(_sampled_spec(**over))
+
+
+def test_spec_sample_k_roundtrips():
+    spec = _sampled_spec()
+    assert exp.from_json(exp.to_json(spec)) == spec
+    assert "sample_k" in exp.to_json(spec)
+
+
+# ---------------------------------------------------------------------------
+# 7. Scale: staging cost follows edges, not nodes
+# ---------------------------------------------------------------------------
+
+def test_plan_restage_scales_with_edges():
+    from repro.sparse.smoke import plan_scale_smoke
+    out = plan_scale_smoke(n_small=2_000, n_big=40_000, k=64, rounds=4,
+                           factor=10.0)
+    assert out["edges_big"] < 64 * 63 * 4 + 1  # O(k^2 * rounds), not O(n)
