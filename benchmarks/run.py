@@ -33,6 +33,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
   obs_*              — repro.obs measurement cost: in-jit metrics +
       recorder flushing vs the bare step (< 5% contract), and the
       telemetry per-round cache speedup; writes BENCH_obs.json.
+  serve_*            — personalized fleet serving (ISSUE 10): continuous-
+      batching prefill/decode throughput and p50/p95 request latency of
+      repro.serve vs decode-slot count; writes BENCH_serve.json.
   roofline_summary   — reads experiments/dryrun/*.json if present.
       derived = #pairs whose dominant term is compute/memory/collective.
 
@@ -928,6 +931,51 @@ def bench_obs(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Personalized fleet serving (continuous batching)
+# ---------------------------------------------------------------------------
+
+def bench_serve(quick: bool) -> None:
+    """Continuous-batching serve throughput (ISSUE 10): one row per
+    decode-slot count, serving synthetic user-affinity traffic against a
+    stacked reduced-qwen fleet through :func:`repro.serve.serve_fleet`.
+    derived = prefill/decode token throughput and the p50/p95 request
+    latency (larger slot tables amortize the vmapped decode but queue
+    admissions, so latency and throughput trade off against ``batch``).
+    Row throughput = completed requests/s — the regression-gate metric.
+    Writes experiments/bench/BENCH_serve.json."""
+    from repro import exp
+    from repro.serve import serve_fleet
+
+    fleet_n = 4
+    requests = 16 if quick else 64
+    base = exp.ExperimentSpec(
+        model=exp.ModelRef(kind="arch", arch="qwen1.5-0.5b",
+                           preset="reduced"),
+        run=exp.RunSpec(nodes=fleet_n),
+        serve=exp.ServeSpec(requests=requests, prompt_len=16, max_new=8,
+                            dtype="f32"))
+    b = exp.build(base)
+    keys = jax.random.split(jax.random.key(0), fleet_n)
+    fleet = jax.vmap(lambda k: b.model.init(k, jnp.float32))(keys)
+    w = BenchWriter()
+    for batch in ((2, 8) if quick else (2, 8, 16)):
+        spec = exp.with_field(base, "serve.batch", batch)
+        serve_fleet(b.model, fleet, spec.serve)  # warmup/compile pass
+        t0 = time.time()
+        res = serve_fleet(b.model, fleet, spec.serve)
+        us = (time.time() - t0) * 1e6 / requests
+        tp = res.throughput
+        w.row(f"serve_batch{batch}", us,
+              f"prefill_tok_s={tp['prefill_tok_s']}"
+              f"|decode_tok_s={tp['decode_tok_s']}"
+              f"|p50_ms={tp['latency_p50_ms']}"
+              f"|p95_ms={tp['latency_p95_ms']}"
+              f"|requests={tp['requests']}|fleet={fleet_n}",
+              spec=spec, throughput=tp["requests_per_s"])
+    w.dump("experiments/bench/BENCH_serve.json")
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary (from dry-run artifacts)
 # ---------------------------------------------------------------------------
 
@@ -957,6 +1005,7 @@ BENCHES = [
     ("engine_step", bench_engine_step),
     ("async", bench_async),
     ("obs", bench_obs),
+    ("serve", bench_serve),
     ("kernels", bench_kernels),
     ("theorem4", bench_theorem4),
     ("table1_rate_T", bench_table1_rate_T),

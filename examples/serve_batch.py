@@ -1,5 +1,6 @@
-"""Batched-serving example: prefill + greedy decode on a reduced SSM model
-(state-space decode is O(1) in context length — the serve-path showcase).
+"""Batched-serving example: train a small fleet, then continuous-batch
+decode on a reduced SSM model (state-space decode is O(1) in context
+length — the serve-path showcase).
 
     PYTHONPATH=src python examples/serve_batch.py --arch falcon-mamba-7b
 """
@@ -15,8 +16,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     args = ap.parse_args(argv)
     return serve_main(["--arch", args.arch, "--preset", "reduced",
-                       "--batch", str(args.batch), "--prompt-len", "48",
-                       "--gen", "16"])
+                       "--nodes", "4", "--steps", "3",
+                       "--requests", "16", "--serve-batch", str(args.batch),
+                       "--prompt-len", "48", "--max-new", "16"])
 
 
 if __name__ == "__main__":

@@ -246,6 +246,11 @@ def make_plan_mixer(plan, *, mesh=None, axis: str = "data", mode: str | None = N
             return tree
         if kind == "dense":
             return _dense_mc(jnp.take(tensors["W"], idxs, axis=0), tree)
+        if kind == "personalized":
+            # base support only — a personalized rule's realized mix goes
+            # through EngineOps.pmix (loss reweighting); plain mix() on a
+            # personalized plan applies the row-stochastic prior as-is
+            return _dense_mc(jnp.take(tensors["pW"], idxs, axis=0), tree)
         if kind == "two_level":
             xs = jnp.take(tensors["pod_B"], idxs, axis=0)
             body = lambda z, B: (two_level_mix(B, plan.pods, z), None)
@@ -362,15 +367,25 @@ def from_rule(rule: engine.UpdateRule, local_opt=None) -> DecentralizedAlgorithm
         if rule.compression is not None:
             cmix = compress.make_compressed_mixer(
                 lambda idx, m: mix(weights[idx], m), rule.compression)
+        grad = lambda x: (None, engine._accumulate(grad_fn, x, key, rule.R))
+        pmix = None
+        if rule.personalized:
+            # personalized oracle contract: grad_fn(x, key) -> (losses, g)
+            # with losses the per-node (n,) loss vector of the sample — the
+            # similarity signal pmix reweights the base rows with in-jit.
+            grad = lambda x: grad_fn(x, key)
+            pmix = lambda off, r, tree, losses: multi_consensus(
+                engine.personalized_weights(weights[off:off + r], losses,
+                                            rule.tau), tree)
         return engine.EngineOps(
             mix=lambda off, r, tree: multi_consensus(
                 weights[off:off + r], tree),
-            grad=lambda x: (None, engine._accumulate(grad_fn, x, key,
-                                                     rule.R)),
+            grad=grad,
             local_update=(local_opt.update if local_opt
                           else (lambda g, s: (g, s))),
             cast_aux=lambda tree: tree,
-            cmix=cmix)
+            cmix=cmix,
+            pmix=pmix)
 
     def _to_engine(s: AlgoState) -> engine.EngineState:
         return engine.EngineState(s.x, s.h, s.g_prev, s.opt_state, s.k,
@@ -433,13 +448,26 @@ def plan_step(algo: DecentralizedAlgorithm, plan, *, mesh=None,
             cmix = compress.make_compressed_mixer(
                 lambda idx, m: mixer(tensors, t + idx, 1, m),
                 rule.compression)
+        grad = lambda x: (None, engine._accumulate(grad_fn, x, key, rule.R))
+        pmix = None
+        if rule.personalized:
+            # staged per-node base rows ("pW", never a dense fallback) are
+            # reweighted in-jit by this step's per-node losses; same oracle
+            # contract as from_rule: grad_fn(x, key) -> (losses, g)
+            grad = lambda x: grad_fn(x, key)
+
+            def pmix(off, r, tree, losses):
+                idxs = (t + off + jnp.arange(r)) % plan.period
+                Ws = engine.personalized_weights(
+                    jnp.take(tensors["pW"], idxs, axis=0), losses, rule.tau)
+                return multi_consensus(Ws, tree)
         ops = engine.EngineOps(
             mix=lambda off, r, tree: mixer(tensors, t + off, r, tree),
-            grad=lambda x: (None, engine._accumulate(grad_fn, x, key,
-                                                     rule.R)),
+            grad=grad,
             local_update=local_update,
             cast_aux=lambda tree: tree,
-            cmix=cmix)
+            cmix=cmix,
+            pmix=pmix)
         es, aux = engine.step(rule, engine.EngineState(
             state.x, state.h, state.g_prev, state.opt_state, state.k,
             state.res, state.buf), ops, obs=obs)
@@ -482,6 +510,17 @@ def local_sgd(gamma: float, local_opt=None) -> DecentralizedAlgorithm:
     schedule, ``empty`` rounds make this a pure local step and the
     periodic ``complete`` round is the global average (paper §1)."""
     return from_rule(engine.make_rule("local_sgd", gamma), local_opt)
+
+
+def personalized(gamma: float, tau: float = 4.0,
+                 local_opt=None) -> DecentralizedAlgorithm:
+    """Dada-style personalized neighbor averaging: x ← P(ℓ)(x − γ g) with
+    P(ℓ) the loss-proximity reweighting of the round's support
+    (:func:`repro.core.engine.personalized_weights`).  The fleet converges
+    to n personalized models, not one consensus model; ``grad_fn`` must
+    return ``(per-node losses, grads)``."""
+    return from_rule(engine.make_rule("personalized", gamma, tau=tau),
+                     local_opt)
 
 
 def gt_local(gamma: float, local_opt=None) -> DecentralizedAlgorithm:

@@ -29,6 +29,10 @@ Mix = the step's gossip window, R = accumulation/consensus rounds):
 ``gt_local``  x ← Mix(x) − γ·h;  h ← Mix(h) + g − g⁻   (DIGing-style
               tracking with local updates: x and h share ONE round)
 ``d2``        x ← Mix(2x − x⁻ − γ(g − g⁻))                  [35]
+``personalized``  x ← P(ℓ)·x − γ·u(g(x)) with P(ℓ) the loss-proximity
+              similarity reweighting of the round's support (Dada-style
+              confidence-weighted neighbor averaging; row-stochastic by
+              construction, NOT doubly stochastic — outside Assumption 3)
 ============  =========================================================
 """
 
@@ -185,6 +189,13 @@ class EngineOps(NamedTuple):
         ``mix`` but quantizing every payload with error-feedback residual
         ``res``; ``on`` gates warmup (see
         :func:`repro.core.compress.make_compressed_mixer`).
+    pmix(offset, rounds, tree, losses) -> tree
+        The personalized window mixer (required when
+        ``rule.personalized``): same rounds as ``mix``, but each round's
+        weights are reweighted in-jit by loss-proximity similarity
+        (:func:`personalized_weights`) before mixing.  ``losses`` is the
+        per-node (n,) loss vector of this step's oracle sample — for
+        personalized rules ``grad`` must return it as its metrics.
     """
 
     mix: Callable[[int, int, PyTree], PyTree]
@@ -192,6 +203,7 @@ class EngineOps(NamedTuple):
     local_update: Callable[[PyTree, Any], Tuple[PyTree, Any]]
     cast_aux: Callable[[PyTree], PyTree]
     cmix: Optional[Callable] = None
+    pmix: Optional[Callable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,6 +255,19 @@ class UpdateRule:
         ``delay>0`` they contribute a zero correction while the stale
         buffers keep advancing, so ``delay`` always counts steps, not
         mixes.  ``comm_interval=1`` is today's path, bit-exact.
+    personalized / tau
+        The Dada-style personalized variant (sgd kind only): each step the
+        round's gossip support is reweighted by per-node loss proximity —
+        α_ij = W_ij · exp(−tau·|ℓ_i − ℓ_j|), rows renormalized
+        (:func:`personalized_weights`) — so nodes average mostly with
+        neighbors whose data looks like theirs and the fleet converges to
+        n *personalized* models instead of one consensus model.  The
+        realized weights are row-stochastic by construction but data-
+        dependent and NOT column-stochastic: this rule is deliberately
+        OUTSIDE the paper's Assumption 3 (no doubly-stochastic consensus
+        guarantee; the per-node objective is the local loss regularized by
+        similar neighbors).  Incompatible with compression/delay/
+        comm_interval — the personalized weights exist only in-jit.
     """
 
     name: str
@@ -257,10 +282,21 @@ class UpdateRule:
     compression: Optional[compress.CompressionConfig] = None
     delay: int = 0
     comm_interval: int = 1
+    personalized: bool = False
+    tau: float = 4.0
 
     def __post_init__(self):
         if self.kind not in ("sgd", "tracking", "difference"):
             raise ValueError(f"unknown rule kind {self.kind!r}")
+        if self.personalized and self.kind != "sgd":
+            raise ValueError("personalized reweighting is defined for the "
+                             "sgd kind only")
+        if self.personalized and (self.compression is not None or self.delay
+                                  or self.comm_interval > 1):
+            raise ValueError(
+                "personalized weights are computed in-jit from this step's "
+                "losses and cannot be combined with compression, delayed "
+                "gossip, or comm_interval gating")
         if self.kind == "difference" and self.R != 1:
             raise ValueError("difference rules take one oracle sample/step")
         if self.delay < 0:
@@ -296,7 +332,8 @@ class UpdateRule:
 # below when it takes parameters beyond gamma/R).
 def make_rule(name: str, gamma: float, R: int = 1,
               compression: Optional[compress.CompressionConfig] = None,
-              delay: int = 0, comm_interval: int = 1) -> UpdateRule:
+              delay: int = 0, comm_interval: int = 1,
+              tau: float = 4.0) -> UpdateRule:
     specs = {
         "dsgd": dict(kind="sgd"),
         "local_sgd": dict(kind="sgd", mix_before_update=True),
@@ -306,6 +343,7 @@ def make_rule(name: str, gamma: float, R: int = 1,
                          correction_in_mix=False, shared_round=True,
                          tracker_init="local"),
         "d2": dict(kind="difference", supports_local_opt=False),
+        "personalized": dict(kind="sgd", personalized=True),
     }
     if name not in specs:
         raise ValueError(f"unknown algo {name!r} (have {sorted(specs)})")
@@ -313,10 +351,31 @@ def make_rule(name: str, gamma: float, R: int = 1,
         raise ValueError(f"{name} uses R=1 (MC-DSGT is the R-round variant)")
     return UpdateRule(name=name, gamma=gamma, R=(1 if name == "d2" else R),
                       compression=compression, delay=delay,
-                      comm_interval=comm_interval, **specs[name])
+                      comm_interval=comm_interval, tau=tau, **specs[name])
 
 
-ALGORITHMS = ("dsgd", "local_sgd", "dsgt", "mc_dsgt", "gt_local", "d2")
+ALGORITHMS = ("dsgd", "local_sgd", "dsgt", "mc_dsgt", "gt_local", "d2",
+              "personalized")
+
+
+def personalized_weights(Ws: jax.Array, losses: jax.Array,
+                         tau: float) -> jax.Array:
+    """Loss-proximity similarity reweighting of a gossip stack (the
+    Dada-style confidence/similarity weights).
+
+    ``Ws`` (R, n, n) is the round window's base weights — its support IS
+    the communication graph; ``losses`` (n,) is this step's per-node loss.
+    Each round's weights become α_ij = W_ij · exp(−tau·|ℓ_i − ℓ_j|) with
+    rows renormalized, so the result is row-stochastic BY CONSTRUCTION but
+    data-dependent and generally not column-stochastic — deliberately
+    outside Assumption 3 (nodes with similar data pull toward each other;
+    dissimilar neighbors are down-weighted instead of averaged away).
+    """
+    l = losses.astype(jnp.float32)
+    sim = jnp.exp(-tau * jnp.abs(l[:, None] - l[None, :]))
+    W = Ws.astype(jnp.float32) * sim[None]
+    den = jnp.maximum(jnp.sum(W, axis=-1, keepdims=True), 1e-12)
+    return W / den
 
 
 # ---------------------------------------------------------------------------
@@ -335,7 +394,15 @@ def _annotate(ops: EngineOps) -> EngineOps:
         with jax.named_scope("obs_grad"):
             return ops.grad(x)
 
-    return ops._replace(mix=mix, grad=grad)
+    pmix = ops.pmix
+    if pmix is not None:
+        base_pmix = pmix
+
+        def pmix(off, r, tree, losses):
+            with jax.named_scope("obs_mix"):
+                return base_pmix(off, r, tree, losses)
+
+    return ops._replace(mix=mix, grad=grad, pmix=pmix)
 
 
 def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
@@ -436,6 +503,21 @@ def step(rule: UpdateRule, state: EngineState, ops: EngineOps,
                                      post_mix=post_mix, h=h)
 
     if rule.kind == "sgd":
+        if rule.personalized:
+            # Personalized neighbor averaging: the oracle runs first so the
+            # per-node losses (the grad metrics, by EngineOps contract) can
+            # reweight this round's support in-jit.  The mix is
+            # row-stochastic only — see :func:`personalized_weights`.
+            if ops.pmix is None:
+                raise ValueError(f"rule {rule.name!r} is personalized but "
+                                 "the runtime provided no EngineOps.pmix")
+            metrics, g = ops.grad(state.x)
+            upd, opt = ops.local_update(g, state.opt)
+            z = _axpy(-gamma, upd, state.x)
+            x = ops.pmix(0, rule.weights_per_step, z, metrics)
+            aux = out(metrics, g=g, x=x, pre_mix=z, post_mix=x)
+            return state._replace(x=x, opt=opt, k=state.k + 1,
+                                  res=new_res(), buf=new_buf()), aux
         if rule.mix_before_update:
             xm = mix_x(0, rule.weights_per_step, state.x)
             metrics, g = ops.grad(xm)

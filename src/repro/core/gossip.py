@@ -117,7 +117,16 @@ class GossipRound:
     * ``sparse``    — :func:`repro.core.algorithms.sparse_mix`: COO edge
       scatter in Laplacian form, z = x + Σ_e w_e (x_src - x_dst) → dst
       (diagonal implied by row-stochasticity; see :mod:`repro.sparse.plan`);
-    * ``dense``     — generic mix(W, ·) einsum.
+    * ``personalized`` — per-node weight rows staged as-is: the round's
+      base support/weights, row-stochastic only (NOT Assumption 3), whose
+      rows the personalized engine reweights in-jit by loss-proximity
+      similarity (:func:`repro.core.engine.personalized_weights`) before
+      mixing.  Kept first-class so non-uniform, data-dependent weights are
+      a real plan path instead of a silent dense fallback;
+    * ``dense``     — generic mix(W, ·) einsum.  A dense round that only
+      got here because every cheaper lowering was rejected carries
+      ``fallback_reason`` naming why (surfaced per window as the
+      ``dense_fallback`` count in :mod:`repro.sim.telemetry`).
     """
 
     kind: str
@@ -132,6 +141,7 @@ class GossipRound:
     edge_src: np.ndarray | None = None         # (E,) int32, sparse
     edge_dst: np.ndarray | None = None         # (E,) int32, sparse
     edge_w: np.ndarray | None = None           # (E,) float64, sparse
+    fallback_reason: str | None = None         # dense: why lowerings skipped
 
     @property
     def n(self) -> int:
@@ -170,7 +180,8 @@ class GossipRound:
 def plan_round(W: WeightMatrix,
                structure: "topo.RoundStructure | None" = None,
                atol: float = 1e-9, pods: int | None = None,
-               sparse: "bool | str" = "auto") -> GossipRound:
+               sparse: "bool | str" = "auto",
+               personalized: bool = False) -> GossipRound:
     """Lower one weight matrix to its cheapest structured form.
 
     ``structure`` is the topology-level tag when the schedule declares one;
@@ -193,13 +204,26 @@ def plan_round(W: WeightMatrix,
     lowering is bit-exact-preserved; ``True``/``False`` force/disable the
     sparse path regardless of size (tests use ``True`` for small-n
     equivalence).
+
+    ``personalized`` marks the round as the base support of a personalized
+    (loss-proximity reweighted) rule: the row-stochastic ``W`` is staged
+    as-is under ``kind="personalized"`` — its n per-node weight rows are
+    the similarity prior the engine renormalizes in-jit — instead of being
+    classified.  This is never a dense fallback: the weights are
+    data-dependent at run time, so no static structured lowering can
+    reproduce the realized mix.
     """
     W = np.asarray(W, np.float64)
     n = W.shape[0]
+    if personalized:
+        assert np.allclose(W.sum(axis=1), 1.0, atol=1e-6), \
+            "personalized base weights must be row-stochastic"
+        return GossipRound("personalized", W)
     if n == 1:  # single node: any valid W is [[1]] — no communication
         rd = GossipRound("empty", W, perm=np.zeros(1, np.int32),
                          w_peer=np.zeros(1, np.float32))
-        return rd if np.allclose(W, 1.0) else GossipRound("dense", W)
+        return rd if np.allclose(W, 1.0) else GossipRound(
+            "dense", W, fallback_reason="single-node matrix is not [[1]]")
     if structure is None or structure.kind == "dense":
         adj = np.abs(W) > atol
         np.fill_diagonal(adj, True)
@@ -249,7 +273,24 @@ def plan_round(W: WeightMatrix,
             rd = _accept(GossipRound(
                 "sparse", W, edge_src=src.astype(np.int32),
                 edge_dst=dst.astype(np.int32), edge_w=W[dst, src]))
-    return rd if rd is not None else GossipRound("dense", W)
+    if rd is not None:
+        return rd
+    # Every cheaper lowering was rejected: fall back to the dense einsum,
+    # but say why — callers surface this per window (sim.telemetry's
+    # dense_fallback count) instead of silently paying O(n^2) per mix.
+    rows_ok = np.allclose(W.sum(axis=1), 1.0, atol=1e-6)
+    cols_ok = np.allclose(W.sum(axis=0), 1.0, atol=1e-6)
+    if rows_ok and not cols_ok:
+        reason = ("row-stochastic-only weights (outside Assumption 3); "
+                  "plan with personalized=True to stage per-node rows")
+    elif structure.kind in ("empty", "complete", "matching", "sun"):
+        reason = f"non-uniform weights on {structure.kind} support"
+    elif n < SPARSE_MIN_NODES:
+        reason = (f"unstructured round below the sparse floor "
+                  f"(n={n} < {SPARSE_MIN_NODES})")
+    else:
+        reason = "unstructured round too dense for the edge-list lowering"
+    return GossipRound("dense", W, fallback_reason=reason)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -303,6 +344,13 @@ class GossipPlan:
         out = {}
         if "dense" in kinds:
             out["W"] = np.stack([r.W for r in self.rounds]).astype(np.float32)
+        if "personalized" in kinds:
+            # n per-node base weight rows per round, staged once; the engine
+            # reweights + renormalizes the rows in-jit from this step's
+            # per-node losses (engine.personalized_weights).
+            out["pW"] = np.stack(
+                [r.W if r.kind == "personalized" else np.eye(n)
+                 for r in self.rounds]).astype(np.float32)
         if "sun" in kinds:
             out["center_mask"] = np.stack(
                 [r.center_mask if r.kind == "sun" else np.zeros(n, np.float32)
@@ -346,12 +394,19 @@ class GossipPlan:
 
     def validate(self) -> None:
         """Assert every structured lowering equals its dense matrix and is a
-        valid gossip matrix (Assumption 3)."""
+        valid gossip matrix (Assumption 3).  ``personalized`` rounds live
+        outside Assumption 3 by design (row-stochastic only, column sums
+        free) — they are checked for row-stochasticity instead."""
         for t, rd in enumerate(self.rounds):
             rec = rd.as_dense()
             assert np.allclose(rec, rd.W, atol=1e-8), \
                 f"round {t}: {rd.kind} lowering != dense matrix"
-            check_assumption3(rec)
+            if rd.kind == "personalized":
+                n = rd.n
+                assert np.allclose(rec @ np.ones(n), np.ones(n), atol=1e-6), \
+                    f"round {t}: personalized base weights not row-stochastic"
+            else:
+                check_assumption3(rec)
 
 
 # ---------------------------------------------------------------------------
@@ -395,18 +450,21 @@ class WeightSchedule:
 
     def plan(self, t0: int = 0, rounds: int | None = None,
              validate: bool = True, pods: int | None = None,
-             sparse: "bool | str" = "auto") -> GossipPlan:
+             sparse: "bool | str" = "auto",
+             personalized: bool = False) -> GossipPlan:
         """Lower rounds [t0, t0+rounds) (default: one full period) to a
         :class:`GossipPlan`; with ``validate`` each structured lowering is
         checked against its dense matrix via :func:`check_assumption3` and
         exact reconstruction.  ``pods`` enables the hierarchical two-level
         lowering for rounds that factor across pod boundaries, ``sparse``
-        the edge-list fallback above the node/density threshold (see
+        the edge-list fallback above the node/density threshold, and
+        ``personalized`` stages every round's row-stochastic base weights
+        as per-node rows for in-jit loss-proximity reweighting (see
         :func:`plan_round`)."""
         rounds = self.period if rounds is None else rounds
         plan = GossipPlan(tuple(
             plan_round(self(t0 + r), self.structure(t0 + r), pods=pods,
-                       sparse=sparse)
+                       sparse=sparse, personalized=personalized)
             for r in range(rounds)))
         if validate:
             plan.validate()

@@ -71,7 +71,8 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
                     plan=None, mesh=None, gossip_axis: str = "data",
                     auto_dense: str = "einsum", obs: tuple = (),
                     compression: Optional[compress.CompressionConfig] = None,
-                    delay: int = 0, comm_interval: int = 1):
+                    delay: int = 0, comm_interval: int = 1,
+                    tau: float = 4.0):
     """Build (init_state, warm_start, step) for one decentralized algorithm.
 
     gossip_impl: 'dense' (einsum multi-consensus), 'sun' (structured
@@ -114,9 +115,12 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
     rule = engine.make_rule(algo, gamma=gamma,
                             R=(1 if algo == "d2" else R),
                             compression=compression, delay=delay,
-                            comm_interval=comm_interval)
+                            comm_interval=comm_interval, tau=tau)
     if gossip_impl not in ("dense", "sun", "pallas", "auto"):
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}")
+    if rule.personalized and gossip_impl not in ("dense", "auto"):
+        raise ValueError("personalized weights are reweighted per step in "
+                         "full precision; use gossip_impl 'dense' or 'auto'")
     if gossip_impl == "sun" and sun_delta is None:
         raise ValueError("gossip_impl='sun' requires sun_delta")
     if gossip_impl == "auto" and plan is None:
@@ -158,7 +162,10 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
 
     def _grads(x_stacked, batch):
         """Per-node R-sample gradient accumulation (clipped); returns
-        (mean loss, stacked grads)."""
+        (mean loss, stacked grads) — or (per-node losses, stacked grads)
+        for personalized rules, whose pmix needs the (n,) loss vector as
+        its similarity signal (the ``core`` wrapper re-means it for the
+        step's "loss" output)."""
         def per_node(params, node_batch):  # node_batch leaves: (R, b, ...)
             vg = jax.value_and_grad(model.train_loss)
             if R == 1:
@@ -184,6 +191,8 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
             return loss / R, _clip(jax.tree.map(lambda t: t / R, g))
 
         losses, grads = jax.vmap(per_node)(x_stacked, batch)
+        if rule.personalized:
+            return losses, grads
         return jnp.mean(losses), grads
 
     def init_state(key, n: int, dtype) -> TrainState:
@@ -225,13 +234,31 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
                 cmix = compress.make_compressed_mixer(
                     lambda idx, m: _mix_rounds(gossip, t, idx, 1, m),
                     compression)
+        pmix = None
+        if rule.personalized:
+            # In-jit loss-proximity reweighting of the round window's base
+            # weights: the staged per-node rows ("pW" — never a dense
+            # fallback) under 'auto', the per-step stack slice under
+            # 'dense'.  ``losses`` is _grads' per-node vector.
+            if gossip_impl == "auto":
+                def pmix(off, r, tree, losses):
+                    idxs = (t + off + jnp.arange(r)) % plan.period
+                    Ws = engine.personalized_weights(
+                        jnp.take(gossip["pW"], idxs, axis=0), losses, rule.tau)
+                    return alg.multi_consensus(Ws, tree, unroll=unroll)
+            else:
+                def pmix(off, r, tree, losses):
+                    Ws = engine.personalized_weights(
+                        gossip[off:off + r], losses, rule.tau)
+                    return alg.multi_consensus(Ws, tree, unroll=unroll)
         return engine.EngineOps(
             mix=lambda off, r, tree: _mix_rounds(gossip, t, off, r, tree),
             grad=lambda x: _grads(x, batch),  # metrics = scalar mean loss
             local_update=(local_opt.update if local_opt is not None
                           else (lambda g, s: (g, s))),
             cast_aux=lambda tree: coll.tree_cast(tree, aux_dtype),
-            cmix=cmix)
+            cmix=cmix,
+            pmix=pmix)
 
     def _to_engine(s: TrainState) -> engine.EngineState:
         return engine.EngineState(s.x, s.h, s.g_prev, s.opt, s.step,
@@ -245,13 +272,17 @@ def make_train_step(model, cfg, *, algo: str = "mc_dsgt", gamma: float,
         ops = _ops(batch, None, 0)  # warm start never gossips
         return _to_train(engine.warm_start(rule, _to_engine(state), ops))
 
+    # personalized _grads returns the per-node loss vector (pmix's
+    # similarity signal); the step's "loss" output stays the scalar mean
+    _loss_out = jnp.mean if rule.personalized else (lambda m: m)
+
     def core(state: TrainState, batch, gossip, t):
         es, aux = engine.step(rule, _to_engine(state),
                               _ops(batch, gossip, t), obs=obs)
         if obs:
             loss, scalars = aux
-            return _to_train(es), {"loss": loss, "obs": scalars}
-        return _to_train(es), {"loss": aux}
+            return _to_train(es), {"loss": _loss_out(loss), "obs": scalars}
+        return _to_train(es), {"loss": _loss_out(aux)}
     if gossip_impl == "auto":
         step = core
         step.gossip_dispatch = _plan_mix.dispatch

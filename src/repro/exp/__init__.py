@@ -28,6 +28,8 @@ from .registry import (  # noqa: F401
     LOCAL_OPTS,
     MOBILITY_TOPOLOGIES,
     MODEL_KINDS,
+    ROUTING_POLICIES,
+    SERVE_DTYPES,
     TOPOLOGIES,
     build_channel_models,
     build_compression,
@@ -53,6 +55,7 @@ from .spec import (  # noqa: F401
     ModelRef,
     ObsSpec,
     RunSpec,
+    ServeSpec,
     TopologySpec,
     from_dict,
     from_json,

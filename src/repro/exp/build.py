@@ -45,13 +45,16 @@ class Result(NamedTuple):
     ``logreg``); ``telemetry`` is the mixing-telemetry recorder when the
     scenario warranted one (faults, mobility, or ``run.telemetry`` set);
     ``built`` is the realized scenario (:class:`Built`) — consumers that
-    need the realized schedule/plan read it here instead of re-building."""
+    need the realized schedule/plan read it here instead of re-building;
+    ``serve`` is the :class:`repro.serve.ServeResult` of the post-training
+    serve phase when ``spec.serve`` enables one, else None."""
 
     state: Any
     history: list
     telemetry: Optional[sim_telemetry.TelemetryRecorder]
     spec: ExperimentSpec
     built: "Built" = None
+    serve: Any = None
 
 
 @dataclasses.dataclass
@@ -117,6 +120,11 @@ class Built:
         if self.spec.obs.metrics:
             out["event_log"] = self.spec.obs.metrics
             out["obs_names"] = list(self.obs_names)
+        sv = self.spec.serve
+        if sv.enabled:
+            out["serve"] = {"requests": sv.requests,
+                            "fleet": sv.fleet or self.spec.run.nodes,
+                            "batch": sv.batch, "routing": sv.routing}
         return out
 
 
@@ -169,6 +177,11 @@ def _validate(spec: ExperimentSpec) -> None:
             raise ValueError(f"topology.kind={t.kind!r} runs the host "
                              "reference runtime: model.kind must be "
                              "'logreg'")
+        if a.name == "personalized":
+            raise ValueError(
+                f"algorithm.name='personalized' stages per-node dense "
+                f"weight rows, which the edge-form {t.kind!r} family "
+                "never materializes — use a dense topology")
         from ..sparse import DENSE_GUARD
         if r.nodes > DENSE_GUARD and r.gossip_impl != "auto":
             raise ValueError(
@@ -200,6 +213,26 @@ def _validate(spec: ExperimentSpec) -> None:
     if o.every < 1:
         raise ValueError(f"obs.every={o.every}: must be >= 1")
     registry.resolve_obs_names(o.names)  # raises on unknown metric names
+    s = spec.serve
+    if s.routing not in registry.ROUTING_POLICIES:
+        raise ValueError(f"serve.routing={s.routing!r}: unknown "
+                         f"(have {sorted(registry.ROUTING_POLICIES)})")
+    if s.dtype not in registry.SERVE_DTYPES:
+        raise ValueError(f"serve.dtype={s.dtype!r}: unknown "
+                         f"(have {sorted(registry.SERVE_DTYPES)})")
+    if s.requests < 0:
+        raise ValueError(f"serve.requests={s.requests}: must be >= 0")
+    if s.enabled:
+        if m.kind != "arch":
+            raise ValueError("serve.requests > 0 needs the 'arch' runtime: "
+                             "serving decodes a trained transformer fleet "
+                             f"(model.kind={m.kind!r})")
+        if s.batch < 1 or s.max_new < 1 or s.prompt_len < 1:
+            raise ValueError("serve.batch/max_new/prompt_len must be >= 1 "
+                             f"(got {s.batch}/{s.max_new}/{s.prompt_len})")
+        if not 0 <= s.fleet <= r.nodes:
+            raise ValueError(f"serve.fleet={s.fleet}: must be 0 (= all "
+                             f"run.nodes) or <= run.nodes={r.nodes}")
 
 
 def build(spec: ExperimentSpec) -> Built:
@@ -214,7 +247,8 @@ def build(spec: ExperimentSpec) -> Built:
     R = al.R if al.name == "mc_dsgt" else 1
     comp = registry.build_compression(spec.compression)
     rule = engine.make_rule(al.name, gamma=al.gamma, R=R, compression=comp,
-                            delay=al.delay, comm_interval=al.comm_interval)
+                            delay=al.delay, comm_interval=al.comm_interval,
+                            tau=al.tau)
     wps = rule.weights_per_step
 
     # horizon only matters for the non-periodic schedules (resampled
@@ -237,7 +271,8 @@ def build(spec: ExperimentSpec) -> Built:
             sched = sim_faults.realize_weight_schedule(sched, fault_models,
                                                        rounds=horizon)
     pods = spec.topology.pods if spec.topology.pods > 1 else None
-    plan = (sched.plan(0, sched.period, pods=pods)
+    plan = (sched.plan(0, sched.period, pods=pods,
+                       personalized=rule.personalized)
             if rs.gossip_impl == "auto" else None)
     telem = None
     if fault_models or rs.telemetry or comp is not None or rule.delay or \
@@ -365,8 +400,15 @@ def run(spec: ExperimentSpec, *, quiet: bool = False) -> Result:
         built.obs.profiler.start()
     try:
         if spec.model.kind == "arch":
-            return _run_arch(built, quiet=quiet)
-        return _run_logreg(built)
+            res = _run_arch(built, quiet=quiet)
+        else:
+            res = _run_logreg(built)
+        if spec.serve.enabled:
+            # serve phase runs inside the try so its per-request obs
+            # events land before the sink closes
+            res = res._replace(serve=_run_serve(built, res.state,
+                                                quiet=quiet))
+        return res
     finally:
         if built.obs is not None:
             built.obs.close()
@@ -468,3 +510,23 @@ def _run_arch(built: Built, *, quiet: bool = False) -> Result:
         con.event("wrote_telemetry", path=rs.telemetry)
     return Result(state=state, history=history, telemetry=telem, spec=spec,
                   built=built)
+
+
+def _run_serve(built: Built, state: Any, *, quiet: bool = False):
+    """Post-training serve phase: slice the first ``serve.fleet`` node
+    copies out of the trained stacked state and serve them with continuous
+    batching (:func:`repro.serve.serve_fleet`), emitting per-request obs
+    events through the run's recorder."""
+    from ..serve import serve_fleet
+
+    sv = built.spec.serve
+    F = sv.fleet or built.spec.run.nodes
+    fleet = jax.tree.map(lambda l: l[:F], state.x)
+    res = serve_fleet(built.model, fleet, sv, obs=built.obs)
+    con = obs_console.Console(quiet=quiet)
+    tp = res.throughput
+    con.print(f"served {tp['requests']} requests over fleet {res.fleet}  "
+              f"decode {tp['decode_tok_s']:.0f} tok/s  "
+              f"p50 {tp['latency_p50_ms']:.1f}ms  "
+              f"p95 {tp['latency_p95_ms']:.1f}ms")
+    return res

@@ -241,6 +241,17 @@ GOSSIP_IMPLS = ("dense", "pallas", "auto")
 
 MODEL_KINDS = ("arch", "logreg")
 
+# ---------------------------------------------------------------------------
+# Serving (repro.serve): request routing policies and cache/param dtypes
+# ---------------------------------------------------------------------------
+
+# user id -> fleet node.  'user-affinity' pins each user to one node's
+# personalization (stable hash); 'round-robin' cycles the fleet (the
+# uniform-fleet ablation — every model is interchangeable).
+ROUTING_POLICIES = ("user-affinity", "round-robin")
+
+SERVE_DTYPES = ("bf16", "f32")
+
 # Gossip payload compression schemes (core.compress owns the vocabulary).
 COMPRESSIONS = compress.SCHEMES
 

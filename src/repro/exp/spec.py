@@ -91,6 +91,7 @@ class AlgorithmSpec:
     local_opt: str = "sgd"
     delay: int = 0
     comm_interval: int = 1
+    tau: float = 4.0   # personalized: loss-proximity similarity temperature
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +186,36 @@ class ObsSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Fleet serving (:mod:`repro.serve`): serve the trained per-node model
+    fleet behind one continuously-batched endpoint.  Off by default —
+    enabled when ``requests > 0``, in which case :func:`repro.exp.run`
+    follows training with a serve phase and attaches a
+    :class:`repro.serve.ServeResult` to the run result.
+
+    ``fleet`` is the number of personalized models served (0 = the trained
+    fleet, ``run.nodes``); ``batch`` caps concurrently-decoding request
+    slots (the continuous-batching window); ``max_new`` / ``prompt_len``
+    shape each synthetic request; ``routing`` is a
+    :data:`repro.exp.registry.ROUTING_POLICIES` key mapping a user id to
+    its node's personalization; ``dtype`` selects the serve-side param /
+    KV-cache precision (``'bf16'`` or ``'f32'``)."""
+
+    requests: int = 0
+    batch: int = 8
+    max_new: int = 16
+    prompt_len: int = 16
+    fleet: int = 0
+    routing: str = "user-affinity"
+    dtype: str = "bf16"
+    seed: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.requests > 0
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """One experiment = one point of the scenario grid.  The default value
     of every field matches the historical ``launch/train.py`` flag default,
@@ -197,13 +228,14 @@ class ExperimentSpec:
     channel: ChannelSpec = ChannelSpec()
     compression: CompressionSpec = CompressionSpec()
     run: RunSpec = RunSpec()
+    serve: ServeSpec = ServeSpec()
     obs: ObsSpec = ObsSpec()
 
 
 _SECTION_TYPES = {"model": ModelRef, "data": DataSpec,
                   "algorithm": AlgorithmSpec, "topology": TopologySpec,
                   "channel": ChannelSpec, "compression": CompressionSpec,
-                  "run": RunSpec, "obs": ObsSpec}
+                  "run": RunSpec, "serve": ServeSpec, "obs": ObsSpec}
 
 
 # ---------------------------------------------------------------------------

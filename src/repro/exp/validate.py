@@ -50,13 +50,21 @@ def iter_example_specs(examples_dir: str):
 
 
 def shrink(spec: S.ExperimentSpec, steps: int) -> S.ExperimentSpec:
-    """A smoke-sized copy of ``spec``: ``steps`` steps, no output files."""
+    """A smoke-sized copy of ``spec``: ``steps`` steps, no output files, and
+    a handful of short serve requests when the spec enables a serve phase
+    (still exercising admit/prefill/decode/evict end to end)."""
+    sv = spec.serve
+    if sv.enabled:
+        sv = dataclasses.replace(sv, requests=min(sv.requests, 8),
+                                 batch=min(sv.batch, 4),
+                                 max_new=min(sv.max_new, 4),
+                                 prompt_len=min(sv.prompt_len, 8))
     return dataclasses.replace(
         spec,
         run=dataclasses.replace(
             spec.run, steps=steps, eval_every=1, checkpoint=None,
             restore=None, telemetry=None),
-        obs=S.ObsSpec())
+        obs=S.ObsSpec(), serve=sv)
 
 
 def validate_obs(steps: int) -> list[str]:

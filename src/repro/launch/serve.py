@@ -1,72 +1,151 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Personalized fleet serving CLI — a thin argv -> spec translator.
 
-Example:
+Like :mod:`repro.launch.train`, every flag maps to one field of
+:class:`repro.exp.ExperimentSpec` (see ``FLAG_TO_FIELD``) and the run
+itself is ``repro.exp.run(spec)``: train the fleet (or ``--restore`` a
+checkpointed one), then serve ``--requests`` synthetic routed requests
+against it with continuous batching (:mod:`repro.serve`).  There is no
+serving code here — dtype policy comes from ``--dtype`` (ServeSpec) and
+decode attention follows the model's kernel policy layer
+(:mod:`repro.kernels.ops` with ``interpret="auto"``), not per-call jits.
+
+Config files round-trip exactly as in train: ``--config PATH`` loads a
+spec JSON as the baseline, explicit flags override it, and
+``--dump-config`` prints the fully-resolved spec JSON and exits.
+
+Example — train a 16-node personalized fleet and serve 64 requests:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --preset reduced --batch 4 --prompt-len 32 --gen 16
+        --preset reduced --nodes 16 --steps 30 --algo personalized \
+        --requests 64 --batch 8 --max-new 16 --routing user-affinity
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
+from repro import exp
 
-from repro import configs
-from repro.models import build, materialize_batch
+# flag dest -> dotted ExperimentSpec field (same contract as launch.train:
+# argparse.SUPPRESS keeps unset flags out of the namespace, so the
+# baseline — dataclass defaults or --config — survives untouched).
+FLAG_TO_FIELD = {
+    "arch": "model.arch",
+    "preset": "model.preset",
+    "steps": "run.steps",
+    "nodes": "run.nodes",
+    "topology": "topology.kind",
+    "radius": "topology.radius",
+    "algo": "algorithm.name",
+    "gamma": "algorithm.gamma",
+    "tau": "algorithm.tau",
+    "gossip_impl": "run.gossip_impl",
+    "link_drop": "channel.link_drop",
+    "hetero_alpha": "data.hetero_alpha",
+    "batch": "data.batch",
+    "seq": "data.seq",
+    "active_vocab": "data.active_vocab",
+    "checkpoint": "run.checkpoint",
+    "restore": "run.restore",
+    "log_every": "run.log_every",
+    "seed": "run.seed",
+    "metrics": "obs.metrics",
+    "requests": "serve.requests",
+    "serve_batch": "serve.batch",
+    "max_new": "serve.max_new",
+    "prompt_len": "serve.prompt_len",
+    "fleet": "serve.fleet",
+    "routing": "serve.routing",
+    "dtype": "serve.dtype",
+    "serve_seed": "serve.seed",
+}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(argument_default=argparse.SUPPRESS)
+    ap.add_argument("--config", metavar="PATH",
+                    help="baseline spec JSON (a spec or a manifest); "
+                         "explicit flags override it")
+    ap.add_argument("--dump-config", action="store_true",
+                    help="print the fully-resolved spec JSON and exit")
+    # -- training side (the fleet being served) ----------------------------
+    ap.add_argument("--arch", help="registered LM architecture")
+    ap.add_argument("--preset", choices=["reduced", "full"])
+    ap.add_argument("--steps", type=int)
+    ap.add_argument("--nodes", type=int,
+                    help="fleet size: one personalized model per node")
+    ap.add_argument("--topology", choices=list(exp.TOPOLOGIES))
+    ap.add_argument("--radius", type=float,
+                    help="unit-disk range for the mobility topologies")
+    ap.add_argument("--algo", choices=list(exp.ALGORITHMS),
+                    help="'personalized' trains genuinely distinct per-node "
+                         "models (loss-proximity neighbor averaging)")
+    ap.add_argument("--gamma", type=float)
+    ap.add_argument("--tau", type=float,
+                    help="personalized rule: loss-proximity temperature "
+                         "(higher = sharper clustering)")
+    ap.add_argument("--gossip-impl", choices=list(exp.GOSSIP_IMPLS))
+    ap.add_argument("--link-drop", type=float,
+                    help="per-round per-link drop probability (repro.sim)")
+    ap.add_argument("--hetero-alpha", type=float,
+                    help="Dirichlet(alpha) non-iid data across nodes — what "
+                         "makes per-node personalization worth serving")
+    ap.add_argument("--batch", type=int, help="training batch per node")
+    ap.add_argument("--seq", type=int)
+    ap.add_argument("--active-vocab", type=int)
+    ap.add_argument("--checkpoint")
+    ap.add_argument("--restore",
+                    help="serve a previously trained fleet: restore the "
+                         "checkpoint, run 0 further steps with --steps 0")
+    ap.add_argument("--log-every", type=int)
+    ap.add_argument("--seed", type=int)
+    ap.add_argument("--metrics", metavar="PATH",
+                    help="repro.obs JSONL event log — includes one "
+                         "serve_request event per completion and a final "
+                         "serve_summary")
+    # -- serving side (ServeSpec) ------------------------------------------
+    ap.add_argument("--requests", type=int,
+                    help="synthetic requests to serve after training "
+                         "(0 disables the serve phase)")
+    ap.add_argument("--serve-batch", type=int, dest="serve_batch",
+                    help="continuous-batching decode slots")
+    ap.add_argument("--max-new", type=int, dest="max_new",
+                    help="tokens generated per request")
+    ap.add_argument("--prompt-len", type=int, dest="prompt_len")
+    ap.add_argument("--fleet", type=int,
+                    help="serve only the first N node models "
+                         "(0 = the whole fleet)")
+    ap.add_argument("--routing", choices=sorted(exp.ROUTING_POLICIES),
+                    help="user-affinity pins each user to one node's "
+                         "personalization; round-robin cycles the fleet")
+    ap.add_argument("--dtype", choices=sorted(exp.SERVE_DTYPES),
+                    help="serve-time parameter/KV-cache dtype")
+    ap.add_argument("--serve-seed", type=int, dest="serve_seed",
+                    help="traffic synthesis seed (users + prompts)")
+    ap.add_argument("--quiet", action="store_true", default=False)
+    return ap
+
+
+def spec_from_args(args: argparse.Namespace) -> exp.ExperimentSpec:
+    spec = exp.load(args.config) if getattr(args, "config", None) \
+        else exp.ExperimentSpec()
+    overrides = {FLAG_TO_FIELD[dest]: value
+                 for dest, value in vars(args).items()
+                 if dest in FLAG_TO_FIELD}
+    # serving is the point of this CLI: default the phase ON so a bare
+    # invocation serves, while --config files keep their own value
+    if "serve.requests" not in overrides and not getattr(args, "config",
+                                                         None):
+        overrides["serve.requests"] = 64
+    return exp.with_overrides(spec, overrides)
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--preset", choices=["reduced", "full"], default="reduced")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = configs.get(args.arch)
-    if args.preset == "reduced":
-        cfg = cfg.reduced()
-    model = build(cfg)
-    params = model.init(jax.random.key(args.seed), jnp.float32)
-
-    max_len = args.prompt_len + args.gen
-    batch = materialize_batch(cfg, args.batch, args.prompt_len,
-                              jax.random.key(args.seed + 1), jnp.float32)
-    cache = model.init_cache(args.batch, max_len, jnp.float32)
-
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
-
-    t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    P = (cfg.frontend_tokens if cfg.arch_type == "vlm" else 0)
-    pos0 = batch["tokens"].shape[1] + P
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache, jnp.int32(pos0 + i))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens.append(tok)
-    tok.block_until_ready()
-    t_decode = time.time() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"prefill: {t_prefill:.3f}s "
-          f"({args.batch * args.prompt_len / max(t_prefill, 1e-9):.0f} tok/s)")
-    print(f"decode:  {t_decode:.3f}s "
-          f"({args.batch * (args.gen - 1) / max(t_decode, 1e-9):.1f} tok/s)")
-    print("sample tokens:", gen[0, :12].tolist())
-    return gen
+    args = build_parser().parse_args(argv)
+    spec = spec_from_args(args)
+    if getattr(args, "dump_config", False):
+        print(exp.to_json(spec, elide_defaults=False))
+        return spec
+    return exp.run(spec, quiet=args.quiet).serve
 
 
 if __name__ == "__main__":

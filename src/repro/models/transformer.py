@@ -70,9 +70,12 @@ def _apply_attn_layer(p, x, cfg, rope, mode, cache, pos):
         q = qf.reshape(q.shape)
         cache_new = attn.cache_insert(cache, k1, v1, pos)
         if cfg.use_pallas:
-            from ..kernels.decode_attention import decode_attention as _dk
-            o = _dk(q, cache_new["k"], cache_new["v"], cache_new["kpos"],
-                    pos, window=cfg.window)
+            # route through the kernel policy layer (not the raw kernel):
+            # ops picks interpret mode per backend and keeps one jit cache
+            from ..kernels import ops as kops
+            o = kops.decode_attention(
+                q, cache_new["k"], cache_new["v"], cache_new["kpos"], pos,
+                window=cfg.window, use_pallas=True, interpret="auto")
         else:
             o = attn.decode_attend(q, cache_new, pos, window=cfg.window,
                                    softcap=cfg.logit_softcap)

@@ -1,0 +1,27 @@
+"""repro.serve — personalized fleet serving.
+
+The trained side of this repo produces a *stacked fleet*: n model copies
+with a leading node axis, one per node of the decentralized run.  Under
+the ``personalized`` update rule those copies are deliberately distinct
+models (loss-proximity neighbor averaging — see
+:class:`repro.core.engine.UpdateRule`), and this package closes the
+train→serve loop: it serves the whole fleet behind ONE continuously
+batched endpoint.
+
+* :mod:`repro.serve.traffic` — synthetic request synthesis and the
+  user→node routing policies (``user-affinity`` pins each user to one
+  node's personalization via a stable hash; ``round-robin`` cycles the
+  fleet — the uniform-fleet ablation);
+* :mod:`repro.serve.engine` — the continuous-batching loop
+  (admit/route/prefill/decode/evict over a slot-based request table):
+  each slot decodes against the *routed node's* parameters, gathered
+  from the stacked fleet, with a per-slot KV cache and per-slot decode
+  positions.
+
+Entry points: ``repro.exp.run(spec)`` runs the serve phase after
+training when ``spec.serve.requests > 0``;
+``python -m repro.launch.serve`` is the argv→spec CLI.
+"""
+
+from .engine import ServeResult, serve_fleet, shard_fleet  # noqa: F401
+from .traffic import Request, route_user, synth_requests  # noqa: F401

@@ -1,0 +1,228 @@
+"""Continuous-batching serve engine over a stacked personalized fleet.
+
+One endpoint serves all n per-node models of a decentralized run.  The
+engine keeps a fixed table of ``serve.batch`` decode *slots*; every loop
+iteration it
+
+1. **admits**  pending requests into free slots — the request's routed
+   node decides which fleet member's parameters the slot binds to;
+2. **prefills** each admitted prompt into a fresh single-request KV cache
+   and scatters it into the slot's row of the stacked cache;
+3. **decodes** ONE token for every slot in a single vmapped call: per-slot
+   parameters (gathered from the stacked fleet), per-slot cache row, and
+   per-slot absolute position — requests at different depths batch
+   together, which is the whole point of continuous batching;
+4. **evicts**  slots that produced their ``max_new`` tokens, records the
+   completed request, and frees the slot for the next admit.
+
+The slot cache is built by stacking ``serve.batch`` independent
+single-request caches on a new leading slot axis, so inside the vmap each
+slot sees exactly the model's native batch-1 cache — including its OWN
+``kpos`` row, which is what lets slots sit at different positions (the
+flat serve path shares one position vector across the batch).
+
+On a device mesh the fleet params shard with the training-side rules
+(:func:`repro.dist.sharding.param_specs` with ``stacked_nodes`` — the
+fleet axis IS the node axis) and the slot cache shards over its slot
+axis; off-mesh everything is a no-op.
+
+Decode attention follows the model's kernel policy (``cfg.use_pallas``
+routes through :mod:`repro.kernels.ops` with ``interpret="auto"``); the
+engine adds no kernel decisions of its own.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import traffic
+
+SERVE_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
+
+
+class ServeResult(NamedTuple):
+    """What a serve phase returns.  ``completed`` is one record per
+    request (rid/user/node/tokens/latency_ms, admission order);
+    ``throughput`` aggregates prefill/decode token rates and request
+    latency percentiles — the BENCH_serve row source."""
+
+    completed: list
+    throughput: dict
+    fleet: int
+    serve: Any  # the ServeSpec this ran
+
+
+def shard_fleet(fleet_params, cfg, mesh):
+    """Place a stacked fleet on ``mesh`` with the training-side sharding
+    rules: the leading fleet axis is the node axis, everything below it
+    follows the per-arch parameter rules."""
+    from jax.sharding import NamedSharding
+
+    from ..dist import sharding
+    specs = sharding.param_specs(fleet_params, cfg, mesh, stacked_nodes=True)
+    return jax.tree.map(
+        lambda l, s: jax.device_put(l, NamedSharding(mesh, s)),
+        fleet_params, specs)
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def serve_fleet(model, fleet_params, serve, *, requests=None, obs=None,
+                mesh=None) -> ServeResult:
+    """Serve ``requests`` (default: synthesized from ``serve``) against the
+    stacked ``fleet_params`` with continuous batching.
+
+    ``model`` is a :class:`repro.models.model.Model`; ``fleet_params``
+    leaves carry a leading fleet axis (a trained run's ``state.x``, or a
+    slice of it).  ``serve`` is a :class:`repro.exp.spec.ServeSpec`.
+    ``obs`` (an :class:`repro.obs.metrics.ObsRecorder` or any sink with
+    ``emit``) receives one ``serve_request`` event per completion plus a
+    final ``serve_summary``.
+    """
+    cfg = model.cfg
+    if getattr(cfg, "arch_type", "dense") in ("vlm", "audio"):
+        raise ValueError("repro.serve serves token-only archs (vlm/audio "
+                         "prompts need frontend inputs the synthetic "
+                         "traffic cannot provide)")
+    if serve.dtype not in SERVE_DTYPES:
+        raise ValueError(f"serve.dtype={serve.dtype!r}: unknown "
+                         f"(have {sorted(SERVE_DTYPES)})")
+    dtype = SERVE_DTYPES[serve.dtype]
+    fleet = jax.tree.leaves(fleet_params)[0].shape[0]
+    B = serve.batch
+    max_len = serve.prompt_len + serve.max_new
+    if requests is None:
+        requests = traffic.synth_requests(serve, fleet=fleet,
+                                          vocab=cfg.vocab_size)
+
+    params = jax.tree.map(lambda l: l.astype(dtype), fleet_params)
+    if mesh is not None:
+        params = shard_fleet(params, cfg, mesh)
+
+    # Slot cache: B independent single-request caches stacked on a new
+    # leading slot axis — each slot owns its kpos row (per-slot positions).
+    def one_cache():
+        return model.init_cache(1, max_len, dtype)
+
+    cache = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[one_cache() for _ in range(B)])
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+
+        from ..dist import sharding
+        cspecs = sharding.batch_specs(cache, mesh)
+        cache = jax.tree.map(
+            lambda l, s: jax.device_put(l, NamedSharding(mesh, s)),
+            cache, cspecs)
+
+    prefill = jax.jit(lambda p, toks, c: model.prefill(p, {"tokens": toks}, c))
+
+    def _decode_one(p, tok, c, pos):
+        logits, c = model.decode_step(p, tok, c, pos)
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), c
+
+    vdecode = jax.jit(jax.vmap(_decode_one, in_axes=(0, 0, 0, 0)))
+    gather = jax.jit(lambda ids: jax.tree.map(lambda p: p[ids], params))
+
+    # host-side slot table
+    active = np.zeros(B, bool)
+    node = np.zeros(B, np.int32)
+    pos = np.zeros(B, np.int32)
+    remaining = np.zeros(B, np.int32)
+    rid = np.full(B, -1, np.int64)
+    admit_t = np.zeros(B, np.float64)
+    toks_out: dict[int, list] = {}
+    req_by_id = {r.rid: r for r in requests}
+
+    pending = deque(requests)
+    completed: list[dict] = []
+    cur_tok = np.zeros((B, 1, 1), np.int32)  # (slot, model batch=1, 1)
+    slot_params = None
+    params_dirty = True
+    prefill_s = decode_s = 0.0
+    prefill_toks = decode_toks = 0
+    t_start = time.perf_counter()
+
+    while pending or active.any():
+        # -- admit + prefill ------------------------------------------------
+        for j in np.flatnonzero(~active):
+            if not pending:
+                break
+            req = pending.popleft()
+            t0 = time.perf_counter()
+            p_node = jax.tree.map(lambda l: l[req.node], params)
+            logits, filled = prefill(p_node, jnp.asarray(req.prompt)[None],
+                                     one_cache())
+            first = int(jnp.argmax(logits[0, -1]))
+            cache = jax.tree.map(lambda big, small: big.at[j].set(small),
+                                 cache, filled)
+            prefill_s += time.perf_counter() - t0
+            prefill_toks += serve.prompt_len
+            active[j] = True
+            node[j] = req.node
+            pos[j] = serve.prompt_len
+            remaining[j] = serve.max_new - 1
+            rid[j] = req.rid
+            admit_t[j] = time.perf_counter()
+            toks_out[req.rid] = [first]
+            cur_tok[j, 0, 0] = first
+            params_dirty = True
+
+        if not active.any():
+            break
+
+        if params_dirty:
+            slot_params = gather(jnp.asarray(node))
+            params_dirty = False
+
+        # -- decode one token for every slot (continuous batch) -------------
+        t0 = time.perf_counter()
+        nxt, cache = vdecode(slot_params, jnp.asarray(cur_tok), cache,
+                             jnp.asarray(pos))
+        nxt = np.asarray(jax.device_get(nxt)).reshape(B)
+        decode_s += time.perf_counter() - t0
+        decode_toks += int(active.sum())
+
+        now = time.perf_counter()
+        for j in np.flatnonzero(active):
+            toks_out[int(rid[j])].append(int(nxt[j]))
+            cur_tok[j, 0, 0] = nxt[j]
+            pos[j] += 1
+            remaining[j] -= 1
+            if remaining[j] <= 0:
+                # -- evict: record completion, free the slot ----------------
+                r = req_by_id[int(rid[j])]
+                rec = {"rid": r.rid, "user": r.user, "node": int(node[j]),
+                       "tokens": toks_out.pop(r.rid),
+                       "latency_ms": round(float(now - admit_t[j]) * 1e3, 3)}
+                completed.append(rec)
+                if obs is not None:
+                    obs.emit({"event": "serve_request", **rec})
+                active[j] = False
+
+    wall = time.perf_counter() - t_start
+    lat = [c["latency_ms"] for c in completed]
+    throughput = {
+        "requests": len(completed),
+        "fleet": fleet,
+        "batch": B,
+        "wall_s": round(wall, 4),
+        "prefill_tok_s": round(prefill_toks / max(prefill_s, 1e-9), 1),
+        "decode_tok_s": round(decode_toks / max(decode_s, 1e-9), 1),
+        "requests_per_s": round(len(completed) / max(wall, 1e-9), 2),
+        "latency_p50_ms": round(_percentile(lat, 50), 3),
+        "latency_p95_ms": round(_percentile(lat, 95), 3),
+    }
+    if obs is not None:
+        obs.emit({"event": "serve_summary", **throughput})
+    completed.sort(key=lambda c: c["rid"])
+    return ServeResult(completed=completed, throughput=throughput,
+                       fleet=fleet, serve=serve)

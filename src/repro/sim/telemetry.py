@@ -48,6 +48,10 @@ TELEMETRY_FIELDS = {
                     "never connects",
     "kinds": "realized gossip-plan round kinds in the window, counted "
              "(empty = fully dropped rounds)",
+    "dense_fallback": "rounds in the window the gossip planner could only "
+                      "lower to the generic dense einsum (every structured/"
+                      "sparse lowering rejected — see GossipRound."
+                      "fallback_reason); 0 for a fully structured window",
     "stale_gap": "delay-adjusted spectral gap: the windowed contraction "
                  "of the rounds whose mixing has actually LANDED on the "
                  "state by this step under stale-window gossip — the "
@@ -147,7 +151,10 @@ class TelemetryRecorder:
         self._rounds: dict[int, tuple] = {}
 
     def _round(self, r: int) -> tuple:
-        """(W64, adjacency, kind) for realized round ``r``."""
+        """(W64, adjacency, kind, dense_fallback) for realized round ``r``:
+        ``dense_fallback`` is True when the gossip planner can only lower
+        this round to the generic dense einsum (plan_round sets a
+        fallback_reason on it)."""
         hit = self._rounds.get(r) if self.cache else None
         if hit is None:
             W = np.asarray(self.realized(r), np.float64)
@@ -156,7 +163,8 @@ class TelemetryRecorder:
             s = self.realized.structure(r)
             kind = s.kind if s is not None else \
                 topo.classify_adjacency(adj).kind
-            hit = (W, adj, kind)
+            rd = gossip.plan_round(W, s)
+            hit = (W, adj, kind, rd.fallback_reason is not None)
             if self.cache:
                 self._rounds[r] = hit
         return hit
@@ -170,23 +178,25 @@ class TelemetryRecorder:
             for r in [r for r in self._rounds if r < floor]:
                 del self._rounds[r]
         rounds = [self._round(r) for r in range(lo, t)]
-        mats = np.stack([w for w, _, _ in rounds])
-        adjs = np.stack([a for _, a, _ in rounds])
+        mats = np.stack([w for w, _, _, _ in rounds])
+        adjs = np.stack([a for _, a, _, _ in rounds])
         kinds: dict = {}
-        for _, _, kind in rounds:
+        for _, _, kind, _ in rounds:
             kinds[kind] = kinds.get(kind, 0) + 1
-        return mats, adjs, kinds
+        fallbacks = sum(1 for _, _, _, fb in rounds if fb)
+        return mats, adjs, kinds, fallbacks
 
     def _window_metrics(self, t: int) -> dict:
         lo = max(0, t - self.window)
         if t <= lo:
             return {"window": [lo, t], "spectral_gap": None,
-                    "eff_diameter": None, "kinds": {}}
-        mats, adjs, kinds = self._window_rounds(lo, t)
+                    "eff_diameter": None, "kinds": {}, "dense_fallback": 0}
+        mats, adjs, kinds, fallbacks = self._window_rounds(lo, t)
         out = {"window": [lo, t],
                "spectral_gap": round(windowed_spectral_gap(mats), 6),
                "eff_diameter": empirical_effective_diameter(adjs),
-               "kinds": kinds}
+               "kinds": kinds,
+               "dense_fallback": fallbacks}
         if self.delay:
             shift = self.delay * self.wps
             s_lo, s_t = max(0, lo - shift), max(0, t - shift)
@@ -216,7 +226,7 @@ class TelemetryRecorder:
             per = compress.payload_bytes(self._dim, c.scheme, c.group)
         total = 0
         for r in range(max(0, t - self.wps), t):
-            _, adj, _ = self._round(r)
+            _, adj, _, _ = self._round(r)
             off = adj & ~np.eye(adj.shape[0], dtype=bool)
             total += int(np.count_nonzero(off.any(axis=1))) * per
         return total

@@ -80,8 +80,8 @@ class SparseWeightSchedule:
         return np.stack([self(t0 + r) for r in range(rounds)]).astype(dtype)
 
     def plan(self, t0: int = 0, rounds: int | None = None, *,
-             validate: bool = True, pods=None,
-             sparse=None) -> SparseGossipPlan:
+             validate: bool = True, pods=None, sparse=None,
+             personalized: bool = False) -> SparseGossipPlan:
         """Lower a window to a :class:`SparseGossipPlan` in O(edges).
 
         ``pods``/``sparse`` are accepted for interface parity with the
@@ -89,6 +89,10 @@ class SparseWeightSchedule:
         and is already sparse).
         """
         del pods, sparse
+        if personalized:
+            raise ValueError("personalized rounds stage per-node dense "
+                             "weight rows; the edge-form plan cannot "
+                             "lower them")
         rounds = self.period if rounds is None else rounds
         plan = SparseGossipPlan.from_rounds(
             self.round(t0 + r) for r in range(rounds))

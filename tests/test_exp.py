@@ -276,6 +276,24 @@ def test_manifest_written_and_restore_mismatch_warns(tmp_path):
     assert exp.load_manifest(mpath)["spec_parsed"] == inplace  # now updated
 
 
+def test_restore_warns_on_serve_field_change(tmp_path):
+    """serve is scenario-defining (NOT in _NON_SCENARIO_SECTIONS): restoring
+    a checkpoint under a different ServeSpec must warn like any other
+    scenario drift — the manifest pins what the artifact was trained to
+    serve."""
+    ckpt = str(tmp_path / "ck.msgpack")
+    exp.run(_tiny_arch_spec(checkpoint=ckpt), quiet=True)
+
+    cont = exp.with_overrides(
+        _tiny_arch_spec(restore=ckpt, steps=1),
+        {"serve.requests": 2, "serve.batch": 2, "serve.prompt_len": 4,
+         "serve.max_new": 2, "serve.dtype": "f32"})
+    with pytest.warns(UserWarning, match="serve.requests"):
+        res = exp.run(cont, quiet=True)
+    # the warned run still serves: continuation + serve phase both happen
+    assert res.serve is not None and res.serve.throughput["requests"] == 2
+
+
 def test_telemetry_manifest_written(tmp_path):
     telem = str(tmp_path / "telem.json")
     spec = exp.ExperimentSpec(

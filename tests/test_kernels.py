@@ -192,6 +192,50 @@ def test_decode_attention_matches_model_path():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
+@settings(max_examples=20, deadline=None)
+@given(S=st.integers(1, 24), window=st.integers(0, 12),
+       seed=st.integers(0, 2**16))
+def test_property_cache_insert_matches_prefill(S, window, seed):
+    """Ring-buffer cache update: inserting a sequence one token at a time
+    (the decode path) must land the EXACT same cache as one cache_prefill
+    of the full sequence — including the wrap case S > C, where only the
+    last C positions survive at slot = pos % C."""
+    import types
+
+    from repro.models import attention as mattn
+    KV, hd = 2, 4
+    cfg = types.SimpleNamespace(window=window, num_kv_heads=KV, head_dim=hd)
+    ks = jax.random.split(jax.random.key(seed), 2)
+    k = _rand(ks[0], (1, S, KV, hd), jnp.float32)
+    v = _rand(ks[1], (1, S, KV, hd), jnp.float32)
+
+    via_prefill = mattn.cache_prefill(
+        mattn.init_cache(cfg, 1, S, jnp.float32), k, v, jnp.arange(S))
+    via_insert = mattn.init_cache(cfg, 1, S, jnp.float32)
+    for pos in range(S):
+        via_insert = mattn.cache_insert(
+            via_insert, k[:, pos:pos + 1], v[:, pos:pos + 1], jnp.int32(pos))
+
+    C = via_prefill["k"].shape[1]
+    assert C == (min(window, S) if window else S)
+    assert via_insert["k"].shape[1] == C
+    for name in ("k", "v", "kpos"):
+        np.testing.assert_array_equal(np.asarray(via_insert[name]),
+                                      np.asarray(via_prefill[name]),
+                                      err_msg=name)
+    # ring semantics: exactly the last C positions survive, each at pos % C
+    kpos = np.asarray(via_insert["kpos"])
+    assert sorted(kpos) == list(range(S - C, S))
+    assert all(kpos[p % C] == p for p in range(S - C, S))
+    # and attending over either cache is the same computation
+    q = _rand(jax.random.key(seed + 1), (1, 1, KV, 1, hd), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(mattn.decode_attend(q, via_insert, jnp.int32(S - 1),
+                                       window=window)),
+        np.asarray(mattn.decode_attend(q, via_prefill, jnp.int32(S - 1),
+                                       window=window)))
+
+
 def test_kernels_integrate_into_model_path():
     """cfg.use_pallas routes the transformer's attention through the Pallas
     kernels (interpret mode) and must match the jnp path end-to-end."""
